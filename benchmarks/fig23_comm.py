@@ -1,0 +1,75 @@
+"""Paper Fig. 2 + Fig. 3 + §4.2: communication-overhead techniques.
+
+Fig. 2: AllReduce vs ScatterReduce communication time as workers scale
+        (4..16) for MobileNet (4.2M) and ResNet-50 (25.6M) — reproduces
+        the crossover the paper reports (AllReduce wins for small models
+        at high worker counts; ScatterReduce wins for large models).
+Fig. 3: MLLess significant-update filtering — communication volume vs
+        threshold, plus the paper's SPIRT in-database win (§4.2).
+
+All numbers come from the serverless simulator (channel model anchored
+on EC2-Redis bandwidth); the TPU-collective analogues are measured by
+the dry-run HLO analysis (EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import get_strategy
+from repro.serverless import ServerlessSetup, simulate_epoch
+
+
+def run(csv_rows):
+    from repro.serverless.simulator import S3
+    models = {"mobilenet": 4.2e6, "resnet50": 25.6e6}
+    # --- Fig 2: comm time vs workers (LambdaML variants use S3)
+    for mname, npar in models.items():
+        for W in (4, 8, 16):
+            setup = ServerlessSetup(n_workers=W, channel=S3)
+            for arch in ("allreduce", "scatterreduce"):
+                rep = simulate_epoch(arch, n_params=int(npar),
+                                     compute_s_per_batch=1.0, setup=setup)
+                per_batch_sync = rep.stages.sync / setup.batches_per_worker
+                csv_rows.append((f"fig2/{mname}/{arch}/W{W}",
+                                 per_batch_sync, "sync_s_per_batch"))
+    get = {r[0]: r[1] for r in csv_rows}
+    # the paper's two qualitative claims (§4.2, Fig 2):
+    #   large model, many workers: ScatterReduce < AllReduce (master
+    #   bandwidth bottleneck);
+    assert get["fig2/resnet50/scatterreduce/W16"] < \
+        get["fig2/resnet50/allreduce/W16"]
+    #   small model, many workers: AllReduce < ScatterReduce (chunked
+    #   exchange is per-op-latency dominated)
+    assert get["fig2/mobilenet/allreduce/W16"] < \
+        get["fig2/mobilenet/scatterreduce/W16"]
+
+    # --- Fig 3: MLLess filtering
+    for frac in (1.0, 0.5, 0.3, 0.1):
+        rep = simulate_epoch("mlless", n_params=int(4.2e6),
+                             compute_s_per_batch=1.0,
+                             significant_fraction=frac)
+        csv_rows.append((f"fig3/mlless/frac{frac}", rep.stages.sync,
+                         "sync_s_per_epoch"))
+    assert get if True else None
+    ml = [r for r in csv_rows if r[0].startswith("fig3/")]
+    assert ml[-1][1] < ml[0][1]    # filtering reduces comm time
+
+    # --- §4.2 SPIRT in-database vs naive fetch-update-store
+    # naive: fetch grads, average outside, store back (3 transfers);
+    # in-db: single in-database op (RedisAI) per the paper
+    from repro.serverless.simulator import REDIS
+    G = 11.7e6 * 4
+    naive_avg = 3 * REDIS.transfer(G, ops=3) * 24
+    indb_avg = REDIS.transfer(G, ops=1) * 24
+    csv_rows.append(("sec42/spirt/naive_avg_s", naive_avg,
+                     "paper: 67.32s"))
+    csv_rows.append(("sec42/spirt/indb_avg_s", indb_avg, "paper: 37.41s"))
+    assert indb_avg < naive_avg
+
+    # --- strategy logical comm bytes (TPU mapping) per worker
+    grads = [np.zeros(int(4.2e6), np.float32)]
+    for name in ("allreduce", "scatterreduce", "parameter_server",
+                 "spirt", "mlless"):
+        b = get_strategy(name).comm_bytes(grads, 16)
+        csv_rows.append((f"fig2/tpu_logical_bytes/{name}/W16", b, "bytes"))
+    return csv_rows

@@ -1,0 +1,96 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from
+results/dryrun/*.json.
+
+  PYTHONPATH=src python -m benchmarks.make_tables [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["mixtral-8x22b", "mixtral-8x7b", "gemma3-4b", "pixtral-12b",
+              "rwkv6-7b", "recurrentgemma-2b", "phi3-mini-3.8b",
+              "qwen1.5-4b", "smollm-135m", "whisper-small"]
+
+
+def _fmt_bytes(b):
+    if b >= 2**30:
+        return f"{b / 2**30:.1f}G"
+    if b >= 2**20:
+        return f"{b / 2**20:.1f}M"
+    return f"{b / 2**10:.0f}K"
+
+
+def load(mesh):
+    rows = {}
+    for f in RESULTS.glob(f"*__{mesh}.json"):
+        d = json.loads(f.read_text())
+        rows[(d["arch"], d["shape"])] = d
+    return rows
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | compile s | bytes/dev (arg+out+temp) | "
+           "collectives (AR/AG/RS/A2A) | wire B/dev |",
+           "|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            d = rows.get((arch, shape))
+            if d is None:
+                continue
+            if "skipped" in d:
+                out.append(f"| {arch} | {shape} | — | — | skipped "
+                           f"(DESIGN.md §3) | — |")
+                continue
+            m = d["memory"]
+            c = d["collectives"]["counts"]
+            out.append(
+                f"| {arch} | {shape} | {d['compile_s']} | "
+                f"{m['peak_estimate_gb']:.2f} GB | "
+                f"{c['all-reduce']}/{c['all-gather']}/"
+                f"{c['reduce-scatter']}/{c['all-to-all']} | "
+                f"{_fmt_bytes(d['collectives']['wire_bytes_per_device'])} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows):
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "dominant | model GFLOPs | useful frac | MFU bound |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            d = rows.get((arch, shape))
+            if d is None or "skipped" in d:
+                continue
+            r = d["roofline"]
+            out.append(
+                f"| {arch} | {shape} | {r['compute_s']:.4g} | "
+                f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | "
+                f"**{r['dominant']}** | {r['model_flops'] / 1e9:.3g} | "
+                f"{r['useful_flops_fraction']:.2f} | "
+                f"{r['mfu_upper_bound']:.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--section", default="both",
+                    choices=["dryrun", "roofline", "both"])
+    args = ap.parse_args()
+    rows = load(args.mesh)
+    if args.section in ("dryrun", "both"):
+        print(f"### Dry-run ({args.mesh})\n")
+        print(dryrun_table(rows))
+        print()
+    if args.section in ("roofline", "both"):
+        print(f"### Roofline ({args.mesh})\n")
+        print(roofline_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Roofline summary over dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads ``results/dryrun/*.json`` (produced by ``repro.launch.dryrun``)
+and emits one row per (arch × shape × mesh): the three roofline terms,
+the dominant bottleneck, and the useful-FLOPs fraction.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def run(csv_rows):
+    files = sorted(RESULTS.glob("*.json")) if RESULTS.exists() else []
+    if not files:
+        csv_rows.append(("roofline/NOTE", 0,
+                         "no dry-run artifacts yet; run "
+                         "python -m repro.launch.dryrun --all"))
+        return csv_rows
+    for f in files:
+        d = json.loads(f.read_text())
+        if "skipped" in d:
+            csv_rows.append((f"roofline/{f.stem}", 0, d["skipped"]))
+            continue
+        rf = d["roofline"]
+        csv_rows.append((
+            f"roofline/{f.stem}",
+            rf["step_time_lower_bound_s"],
+            f"dom={rf['dominant']} comp={rf['compute_s']:.4f} "
+            f"mem={rf['memory_s']:.4f} coll={rf['collective_s']:.4f} "
+            f"useful={rf['useful_flops_fraction']:.2f} "
+            f"peakGB={d['memory']['peak_estimate_gb']:.1f}"))
+    return csv_rows

@@ -1,0 +1,49 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows.  Usage:
+    PYTHONPATH=src python -m benchmarks.run [--only table2|fig23|table3|roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (fig23_comm, roofline_report, strategy_matrix,
+                            table2_cost, table3_convergence)
+    suites = {
+        "table2": table2_cost.run,
+        "fig23": fig23_comm.run,
+        "table3": table3_convergence.run,
+        "roofline": roofline_report.run,
+        "strategy_matrix": strategy_matrix.run,
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    rows = []
+    for name, fn in suites.items():
+        t0 = time.time()
+        try:
+            fn(rows)
+            rows.append((f"{name}/_suite_seconds", time.time() - t0, "ok"))
+        except Exception as e:  # report, keep going
+            rows.append((f"{name}/_suite_FAILED", time.time() - t0,
+                         repr(e)))
+            import traceback
+            traceback.print_exc()
+    print("name,value,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value},{str(derived).replace(',', ';')}")
+    if any("_suite_FAILED" in r[0] for r in rows):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

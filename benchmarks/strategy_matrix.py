@@ -1,0 +1,52 @@
+"""Strategy × sharding-profile matrix (EXPERIMENTS.md §Perf pair 3),
+read from the dry-run artifacts — the paper's framework comparison
+expressed as TPU collective schedules.
+
+  PYTHONPATH=src python -m benchmarks.strategy_matrix
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def run(csv_rows):
+    patterns = {
+        "baseline_allreduce": "phi3-mini-3.8b__train_4k__16x16",
+        "baseline_scatterreduce":
+            "phi3-mini-3.8b__train_4k__16x16__strat_scatterreduce",
+        "dp_allreduce":
+            "phi3-mini-3.8b__train_4k__16x16__dp_strat_allreduce",
+        "dp_parameter_server":
+            "phi3-mini-3.8b__train_4k__16x16__dp_strat_parameter_server",
+        "dp_spirt": "phi3-mini-3.8b__train_4k__16x16__dp_strat_spirt",
+        "dp_mlless": "phi3-mini-3.8b__train_4k__16x16__dp_strat_mlless",
+        "dp_quantized":
+            "phi3-mini-3.8b__train_4k__16x16__dp_strat_"
+            "quantized_scatterreduce",
+        "zero3": "phi3-mini-3.8b__train_4k__16x16__zero3",
+    }
+    found = 0
+    for label, stem in patterns.items():
+        f = RESULTS / f"{stem}.json"
+        if not f.exists():
+            csv_rows.append((f"strategy_matrix/{label}", -1, "missing — "
+                             "run scripts/dryrun_all.sh"))
+            continue
+        d = json.loads(f.read_text())
+        rf = d["roofline"]
+        csv_rows.append((
+            f"strategy_matrix/{label}",
+            rf["step_time_lower_bound_s"],
+            f"coll={rf['collective_s']:.3f}s wireGB="
+            f"{d['collectives']['wire_bytes_per_device'] / 2**30:.1f}"))
+        found += 1
+    if found >= 4:
+        get = {r[0].split("/")[-1]: r[1] for r in csv_rows
+               if r[0].startswith("strategy_matrix/") and r[1] > 0}
+        # the paper's §4.2 master bottleneck must be visible under dp
+        if "dp_parameter_server" in get and "dp_allreduce" in get:
+            assert get["dp_parameter_server"] > 10 * get["dp_allreduce"]
+    return csv_rows

@@ -1,0 +1,57 @@
+"""Reproduce the paper's cost-performance analysis (Table 2 + Discussion).
+
+Recomputes the serverless-vs-GPU cost crossover: serverless wins for
+MobileNet-class models, dedicated accelerators win as models grow —
+then extends the analysis with TPU v5e pod pricing for the assigned
+architectures (beyond-paper, DESIGN.md §5).
+
+  PYTHONPATH=src python examples/paper_cost_analysis.py
+"""
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.costmodel import flops as F, pricing
+from repro.serverless import (PAPER_TABLE2, ServerlessSetup,
+                              paper_cost_check, simulate_epoch)
+
+
+def main():
+    print("=== 1. Validate the paper's Table 2 cost arithmetic ===")
+    print(f"{'model':10s} {'framework':14s} {'paper $':>8s} {'ours $':>8s}")
+    for model in ("mobilenet", "resnet18"):
+        for arch in ("spirt", "scatterreduce", "allreduce", "mlless",
+                     "gpu"):
+            r = paper_cost_check(model, arch)
+            print(f"{model:10s} {arch:14s} {r['paper_total']:8.4f} "
+                  f"{r['our_total']:8.4f}")
+
+    print("\n=== 2. The crossover: cost vs model size (simulated) ===")
+    print(f"{'params':>12s} {'serverless $':>13s} {'gpu $':>9s} {'winner':>10s}")
+    for n_params in (1e6, 4.2e6, 11.7e6, 25e6, 60e6, 150e6):
+        # compute time scales ~linearly with params on both platforms;
+        # anchor on the paper's MobileNet measurements
+        comp_sls = 14.3 * n_params / 4.2e6
+        comp_gpu = (92.0 / 24) * n_params / 4.2e6
+        sls = simulate_epoch("scatterreduce", n_params=int(n_params),
+                             compute_s_per_batch=comp_sls,
+                             setup=ServerlessSetup(ram_gb=2.0 + n_params / 2e7))
+        gpu = simulate_epoch("gpu", n_params=int(n_params),
+                             compute_s_per_batch=comp_gpu)
+        winner = "serverless" if sls.total_cost < gpu.total_cost else "gpu"
+        print(f"{n_params:12,.0f} {sls.total_cost:13.4f} "
+              f"{gpu.total_cost:9.4f} {winner:>10s}")
+
+    print("\n=== 3. Beyond paper: TPU v5e pod pricing, assigned archs ===")
+    print(f"{'arch':20s} {'step flops':>12s} {'$/1M tokens @40%MFU':>20s}")
+    for arch in ("smollm-135m", "qwen1.5-4b", "phi3-mini-3.8b",
+                 "mixtral-8x7b", "mixtral-8x22b"):
+        cfg = get_config(arch)
+        f = F.train_step_flops(cfg, 256, 4096)
+        tokens = 256 * 4096
+        t = f / (256 * pricing.HW.peak_flops_bf16) / 0.4
+        usd_per_mtok = pricing.tpu_cost(t, 256) / tokens * 1e6
+        print(f"{arch:20s} {f:12.3e} {usd_per_mtok:20.4f}")
+
+
+if __name__ == "__main__":
+    main()

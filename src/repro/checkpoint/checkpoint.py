@@ -1,0 +1,55 @@
+"""Sharding-aware msgpack checkpointing (no external deps beyond msgpack)."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, tree: Any) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {
+        "treedef": str(treedef),
+        "leaves": [
+            {"dtype": str(np.asarray(l).dtype),
+             "shape": list(np.asarray(l).shape),
+             "data": np.asarray(l).tobytes()}
+            for l in jax.device_get(leaves)
+        ],
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure (and shardings) of ``like``."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    like_leaves, treedef = jax.tree.flatten(like)
+    stored = payload["leaves"]
+    if len(stored) != len(like_leaves):
+        raise ValueError(
+            f"checkpoint has {len(stored)} leaves, expected "
+            f"{len(like_leaves)}")
+    out = []
+    for rec, ref in zip(stored, like_leaves):
+        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(
+            rec["shape"])
+        if tuple(arr.shape) != tuple(np.asarray(ref).shape):
+            raise ValueError(
+                f"shape mismatch {arr.shape} vs {np.asarray(ref).shape}")
+        dev = jax.device_put(arr, getattr(ref, "sharding", None)) \
+            if hasattr(ref, "sharding") else jnp.asarray(arr)
+        out.append(dev.astype(ref.dtype))
+    return jax.tree.unflatten(treedef, out)

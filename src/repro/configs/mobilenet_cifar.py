@@ -1,0 +1,33 @@
+"""MobileNet-style CNN for CIFAR — the paper's lightweight model (~4.2M params).
+
+Depthwise-separable convolution stack (Howard et al. 2017), adapted to
+32x32 inputs as in the paper's CIFAR-10 experiments.
+"""
+from dataclasses import dataclass, field
+from typing import Tuple
+
+from repro.configs import base
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    family: str = "cnn"
+    kind: str = "mobilenet"            # mobilenet | resnet18
+    num_classes: int = 10
+    image_size: int = 32
+    channels: int = 3
+    width_mult: float = 1.0
+    dtype: str = "float32"
+    citation: str = ""
+
+    def reduced(self, **_):
+        import dataclasses
+        return dataclasses.replace(self, width_mult=0.25)
+
+
+CONFIG = base.register(CNNConfig(
+    name="mobilenet-cifar",
+    kind="mobilenet",
+    citation="paper §3.2 (MobileNet, ~4.2M params, CIFAR-10)",
+))

@@ -1,0 +1,26 @@
+"""Pixtral 12B — VLM: Pixtral-ViT frontend (stub) + Mistral-Nemo decoder.
+
+[hf:mistralai/Pixtral-12B-2409]: decoder 40 layers, d_model 5120,
+32 heads / 8 KV heads, d_ff 14336, vocab 131072.  The vision encoder +
+projector is the modality-frontend STUB: ``input_specs`` provides
+precomputed patch embeddings of shape (B, n_patches, d_model).
+"""
+from repro.configs.base import GLOBAL, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="pixtral-12b",
+    family="vlm",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=131072,
+    layer_pattern=(GLOBAL,),
+    n_patches=1024,                 # stub ViT patches prepended to text
+    rope_theta=1_000_000.0,
+    window=4096,
+    long_context="swa",             # full-attn dense: long_500k runs the
+                                    # sliding-window variant (DESIGN.md §3)
+    citation="hf:mistralai/Pixtral-12B-2409",
+))

@@ -1,0 +1,23 @@
+"""RecurrentGemma 2B — hybrid: RG-LRU recurrence + local attention, 1:2.
+
+[arXiv:2402.19427] (Griffin): 26 layers, d_model 2560, 10 heads / 1 KV
+head (MQA), d_ff 7680, vocab 256000.  Pattern: 2 recurrent blocks then
+1 local-attention block.
+"""
+from repro.configs.base import LOCAL, RGLRU, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    d_ff=7680,
+    vocab_size=256000,
+    layer_pattern=(RGLRU, RGLRU, LOCAL),
+    window=2048,
+    mlp="gelu",
+    long_context="native",    # recurrent state + window cache only
+    citation="arXiv:2402.19427",
+))

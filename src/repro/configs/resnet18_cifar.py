@@ -1,0 +1,9 @@
+"""ResNet-18 for CIFAR — the paper's heavier model (11.7M params)."""
+from repro.configs import base
+from repro.configs.mobilenet_cifar import CNNConfig
+
+CONFIG = base.register(CNNConfig(
+    name="resnet18-cifar",
+    kind="resnet18",
+    citation="paper §3.2 (ResNet-18, 11.7M params, CIFAR-10)",
+))

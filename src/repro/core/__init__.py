@@ -1,0 +1,6 @@
+from repro.core.strategies import (  # noqa: F401
+    AllReduce, MLLess, ParameterServer, ScatterReduce, Spirt, Strategy,
+    get_strategy,
+)
+from repro.core.train_step import TrainStep, build_train_step  # noqa: F401
+from repro.core.serve_step import ServeStep, build_serve_step  # noqa: F401

@@ -1,0 +1,64 @@
+"""Context-parallel decode attention (flash-decoding) — beyond paper.
+
+For ``long_500k`` (batch 1) the KV cache is sharded over the data axes
+on its *sequence* dimension.  The baseline path lets GSPMD handle the
+softmax over the sharded axis (it all-gathers the cache); this module
+computes the numerically-exact distributed softmax instead:
+
+    per shard:   local scores  -> local max m_i, sum l_i, weighted acc_i
+    combine:     m = pmax(m_i);  l = psum(l_i * exp(m_i - m))
+                 out = psum(acc_i * exp(m_i - m)) / l
+
+Wire bytes: O(B * H * hd) per step instead of O(L * KV * hd) — for a
+524k cache over 16 shards that is ~5 orders of magnitude less traffic.
+
+Use inside a ``jax.shard_map`` whose manual axes include ``axis_name``;
+slot positions are reconstructed from ``jax.lax.axis_index``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_decode_attention(q, k_shard, v_shard, pos, *, axis_name,
+                           total_len, window=None):
+    """q: (B, 1, H, hd) replicated; k/v_shard: (B, L_loc, KV, hd) — the
+    local slice of a ring buffer of global length ``total_len`` laid out
+    contiguously over ``axis_name``.  Returns (B, 1, H, hd) replicated.
+    """
+    B, L_loc, KV, hd = k_shard.shape
+    H = q.shape[2]
+    G = H // KV
+    shard = jax.lax.axis_index(axis_name)
+    base = shard * L_loc
+
+    pos = jnp.asarray(pos)
+    pos_b = jnp.broadcast_to(pos, (B,))
+    slots = base + jnp.arange(L_loc)                     # global slot ids
+    L = total_len
+    slot_pos = pos_b[:, None] - jnp.mod(pos_b[:, None] - slots[None, :], L)
+    valid = slot_pos >= 0
+    if window is not None:
+        valid = valid & (slot_pos > pos_b[:, None] - window)
+
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,blkh->bgkl", qg, k_shard,
+                   preferred_element_type=jnp.float32) / (hd ** 0.5)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+
+    m_loc = jnp.max(s, axis=-1)                          # (B,G,KV)
+    p = jnp.exp(s - m_loc[..., None])
+    l_loc = jnp.sum(p, axis=-1)
+    acc_loc = jnp.einsum("bgkl,blkh->bkgh", p.astype(v_shard.dtype),
+                         v_shard, preferred_element_type=jnp.float32)
+
+    m = jax.lax.pmax(m_loc, axis_name)
+    corr = jnp.exp(m_loc - m)
+    l = jax.lax.psum(l_loc * corr, axis_name)
+    acc = jax.lax.psum(acc_loc * corr[..., None].transpose(0, 2, 1, 3),
+                       axis_name)
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return out.reshape(B, 1, H, hd).astype(q.dtype)

@@ -1,0 +1,29 @@
+"""Losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_cross_entropy(logits, labels):
+    """logits: (B, S, V) any float dtype; labels: (B, S) int32.
+
+    Computed in fp32; mean over all tokens.
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def classification_loss(logits, labels):
+    """logits: (B, C); labels: (B,) int32."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(
+        jnp.float32))

@@ -1,0 +1,1 @@
+from repro.costmodel import flops, pricing  # noqa: F401

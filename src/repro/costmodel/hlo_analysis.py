@@ -1,0 +1,154 @@
+"""Post-SPMD HLO analysis: collective bytes with while-loop multipliers.
+
+``cost_analysis()`` has no collective accounting and counts scan bodies
+once (DESIGN.md §6), so we parse ``compiled.as_text()``:
+
+  1. split the module into named computations,
+  2. find every while op and recover its trip count from the canonical
+     ``compare(counter, constant)`` pattern in the condition computation,
+  3. propagate multipliers (nested whiles multiply),
+  4. sum result-shape bytes of every collective op, scaled by its
+     computation's multiplier.
+
+Byte semantics per op (per-device wire-byte estimates for a ring of
+size W; W unknown at parse time, so we report *result-shape bytes* and
+let the roofline layer apply schedule factors):
+  all-reduce: 2x result bytes; all-gather/reduce-scatter: 1x;
+  all-to-all / collective-permute: 1x.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# per-device wire bytes as a multiple of the op's RESULT bytes, for a
+# ring schedule over a group of size g:
+#   all-reduce      2(g-1)/g x result      ~ 2x
+#   all-gather      (g-1)/g x result       ~ 1x
+#   reduce-scatter  (g-1)/g x input = (g-1) x result   <- scales with g!
+#   all-to-all      (g-1)/g x result       ~ 1x
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+_GROUP_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[16,512]{1,0}' or a tuple '(f32[2], f32[2])' -> total bytes."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, float]
+    total_bytes: float          # result-shape bytes × multipliers
+    wire_bytes: float           # schedule-weighted (2x for all-reduce)
+    unresolved_loops: int
+
+
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """Computation name -> its instruction lines (body between braces)."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.rstrip()
+        if cur is None and stripped.endswith("{") and "=" not in \
+                stripped.split("(")[0]:
+            m = _HEADER_RE.match(stripped)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def analyze_collectives(hlo: str) -> CollectiveStats:
+    comps = _split_computations(hlo)
+
+    # map body-computation -> (parent computation, trip count) using the
+    # "known_trip_count" backend_config XLA attaches to scan-style whiles
+    body_trips: Dict[str, Tuple[str, int]] = {}
+    unresolved = 0
+    for cname, lines in comps.items():
+        for ln in lines:
+            if " while(" not in ln:
+                continue
+            mb = _BODY_RE.search(ln)
+            if not mb:
+                continue
+            mt = _TRIP_RE.search(ln)
+            if mt:
+                trips = int(mt.group(1))
+            else:
+                trips = 1
+                unresolved += 1
+            body_trips[mb.group(1)] = (cname, trips)
+
+    # multiplier per computation (nested loops multiply)
+    def multiplier(cname: str, seen=()) -> float:
+        if cname in seen:
+            return 1.0
+        if cname in body_trips:
+            parent, trips = body_trips[cname]
+            return trips * multiplier(parent, seen + (cname,))
+        return 1.0
+
+    # also attribute computations *called* by loop bodies (fusions etc.):
+    # conservative approach — collectives only appear at top computation
+    # scope in post-SPMD HLO, inside entry or while bodies.
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    bytes_by: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    total = 0.0
+    wire = 0.0
+    for cname, lines in comps.items():
+        mult = multiplier(cname)
+        for ln in lines:
+            for kind in _COLLECTIVES:
+                # "%x = bf16[..] all-reduce(" / "all-reduce-start("
+                if re.search(rf"=\s*[^=]*\b{kind}(-start)?\(", ln):
+                    lhs = ln.split("=", 1)[1]
+                    shape_part = lhs.split(kind)[0]
+                    b = _shape_bytes(shape_part)
+                    factor = _WIRE_FACTOR[kind]
+                    if kind == "reduce-scatter":
+                        gm = _GROUP_RE.search(ln)
+                        g = len(gm.group(1).split(",")) if gm else 2
+                        factor = max(g - 1, 1)
+                    counts[kind] += int(mult)
+                    bytes_by[kind] += b * mult
+                    total += b * mult
+                    wire += b * mult * factor
+                    break
+    return CollectiveStats(counts=counts, bytes_by_kind=bytes_by,
+                           total_bytes=total, wire_bytes=wire,
+                           unresolved_loops=unresolved)

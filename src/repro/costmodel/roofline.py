@@ -1,0 +1,68 @@
+"""Roofline-term computation from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+    compute term    = FLOPs_global / (chips × peak_FLOP/s)
+    memory term     = HBM_bytes_per_device / HBM_bw
+    collective term = wire_bytes_per_device / link_bw
+
+The compiled SPMD module is the *per-device* program, so HLO-derived
+byte counts are already per-device; the global analytic FLOPs are
+divided by the chip count.  Sources and caveats in DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.costmodel.pricing import HW
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float          # 6·N_active·D
+    hlo_flops: float            # analytic exact count (scan-corrected)
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Perfect-overlap lower bound: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def mfu_upper_bound(self) -> float:
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (t * self.chips * HW.peak_flops_bf16)
+
+    def as_dict(self) -> Dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "step_time_lower_bound_s": self.step_time_s,
+            "model_flops": self.model_flops, "hlo_flops": self.hlo_flops,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "mfu_upper_bound": self.mfu_upper_bound, "chips": self.chips,
+        }
+
+
+def roofline(flops_global: float, hbm_bytes_per_dev: float,
+             wire_bytes_per_dev: float, chips: int,
+             model_flops: float) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops_global / (chips * HW.peak_flops_bf16),
+        memory_s=hbm_bytes_per_dev / HW.hbm_bandwidth,
+        collective_s=wire_bytes_per_dev / HW.ici_bandwidth,
+        model_flops=model_flops, hlo_flops=flops_global, chips=chips)

@@ -1,0 +1,2 @@
+from repro.data.synthetic import cifar_like, lm_batches, token_stream  # noqa: F401
+from repro.data.loader import WorkerShards, global_batch_iter  # noqa: F401

@@ -1,0 +1,101 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``swa_attention`` carries a custom VJP whose backward recomputes
+attention with the pure-jnp reference (flash-style recompute — no
+O(S^2) residuals saved), so the kernel is usable inside ``jax.grad``.
+
+``INTERPRET`` is True on CPU (kernel bodies execute as jnp — the
+validation mode for this container) and False on TPU (Mosaic lowering).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import block_significance as _bs
+from repro.kernels import fused_adamw as _fa
+from repro.kernels import ref as _ref
+from repro.kernels import swa_attention as _swa
+
+INTERPRET = jax.default_backend() == "cpu"
+
+
+# ---------------------------------------------------------------------------
+# sliding-window flash attention
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _swa_core(q, k, v, window, causal):
+    S = q.shape[1]
+    qb = 256 if S % 256 == 0 else (128 if S % 128 == 0 else S)
+    kb = qb
+    return _swa.swa_attention_fwd(q, k, v, window=window, causal=causal,
+                                  q_block=qb, kv_block=kb,
+                                  interpret=INTERPRET)
+
+
+def _swa_fwd(q, k, v, window, causal):
+    return _swa_core(q, k, v, window, causal), (q, k, v)
+
+
+def _swa_bwd(window, causal, res, g):
+    # memory-light backward: the chunked flash bwd from the model library
+    from repro.models import attention as _att
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _att.chunked_attention(q_, k_, v_, window=window,
+                                                  causal=causal), q, k, v)
+    return vjp(g)
+
+
+_swa_core.defvjp(_swa_fwd, _swa_bwd)
+
+
+def swa_attention(q, k, v, *, window=None, causal=True):
+    return _swa_core(q, k, v, window, causal)
+
+
+# ---------------------------------------------------------------------------
+# MLLess block significance
+# ---------------------------------------------------------------------------
+def block_significance(blocks, threshold):
+    """blocks: (n, b) -> bool mask of significant blocks."""
+    sq = _bs.block_norms(blocks, interpret=INTERPRET)
+    rms = jnp.sqrt(jnp.mean(sq) + 1e-20)
+    return jnp.sqrt(sq) > threshold * rms
+
+
+def significance_filter(blocks, threshold):
+    """Returns (kept, residual, mask) in one fused pass."""
+    mask = block_significance(blocks, threshold)
+    kept, resid = _bs.masked_filter(blocks, mask, interpret=INTERPRET)
+    return kept, resid, mask
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 chunked WKV
+# ---------------------------------------------------------------------------
+def wkv6(r, k, v, logw, u, *, chunk=64):
+    """Chunked WKV recurrence (state VMEM-resident). Shapes as ref.wkv6."""
+    from repro.kernels import wkv6 as _w
+    T = r.shape[1]
+    c = chunk
+    while T % c:
+        c //= 2
+    return _w.wkv6_chunked(r, k, v, logw, u, chunk=max(c, 1),
+                           interpret=INTERPRET)
+
+
+# ---------------------------------------------------------------------------
+# fused AdamW
+# ---------------------------------------------------------------------------
+def fused_adamw(g, m, v, p, *, lr, b1, b2, eps, wd, c1, c2):
+    """Pytree-leaf update: any-shape operands, flattened internally."""
+    shape = g.shape
+    out = _fa.fused_adamw_flat(
+        g.reshape(-1), m.reshape(-1), v.reshape(-1), p.reshape(-1),
+        jnp.asarray(c1), jnp.asarray(c2), lr=lr, b1=b1, b2=b2, eps=eps,
+        wd=wd, interpret=INTERPRET)
+    u, m_new, v_new = (x.reshape(shape) for x in out)
+    return u.astype(p.dtype), m_new, v_new

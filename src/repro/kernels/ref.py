@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swa_attention(q, k, v, *, window=None, causal=True):
+    """Naive O(S^2) masked softmax attention. Shapes as the kernel."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qr = q.reshape(B, S, KV, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qr, kf) / (hd ** 0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, vf)
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def block_norms(blocks):
+    return jnp.sum(blocks.astype(jnp.float32) ** 2, axis=1)
+
+
+def masked_filter(blocks, mask):
+    bf = blocks.astype(jnp.float32)
+    kept = bf * mask[:, None].astype(jnp.float32)
+    return kept, bf - kept
+
+
+def wkv6(r, k, v, logw, u):
+    """Exact step-by-step RWKV6 recurrence (the kernel oracle).
+
+    r,k,v,logw: (B, T, H, N); u: (H, N).  S_t = diag(w_t) S_{t-1} +
+    k_t v_t^T;  y_t = r_t (S_{t-1} + diag(u) k_t v_t^T).
+    """
+    B, T, H, N = r.shape
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(S, t):
+        rt, kt, vt, wt = rf[:, t], kf[:, t], vf[:, t], w[:, t]
+        kv = jnp.einsum("bhn,bhm->bhnm", kt, vt)
+        y = jnp.einsum("bhn,bhnm->bhm", rt,
+                       S + uf[None, :, :, None] * kv)
+        return wt[..., None] * S + kv, y
+
+    S0 = jnp.zeros((B, H, N, N), jnp.float32)
+    _, ys = jax.lax.scan(step, S0, jnp.arange(T))
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype)
+
+
+def fused_adamw_flat(g, m, v, p, c1, c2, *, lr, b1, b2, eps, wd):
+    gf = g.astype(jnp.float32)
+    pf = p.astype(jnp.float32)
+    m_new = b1 * m + (1 - b1) * gf
+    v_new = b2 * v + (1 - b2) * gf * gf
+    u = -lr * ((m_new / c1) / (jnp.sqrt(v_new / c2) + eps) + wd * pf)
+    return u, m_new, v_new

@@ -1,0 +1,112 @@
+"""Sliding-window flash-attention forward — Pallas TPU kernel.
+
+Tiling: grid (batch, kv_head, q_blocks).  Each program holds one
+(Bq, hd) query tile in VMEM plus the full per-(b, kv-head) K/V strips
+(the window bounds how much is ever *read*: the kv loop runs only over
+blocks intersecting [q_start - window + 1, q_end], with a traced-bound
+``fori_loop`` so out-of-window blocks cost nothing).  Online softmax in
+fp32 accumulators, GQA folded into the tile's head-group dim.
+
+MXU alignment: Bq and Ck are multiples of 128 where shapes allow;
+``ops.swa_attention`` pads the head_dim/seq to legal tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, window, causal, q_block,
+                 kv_block, seq_len):
+    # q_ref: (q_block, G, hd); k_ref/v_ref: (seq, hd); o_ref like q_ref
+    qi = pl.program_id(2)
+    q_start = qi * q_block
+    q = q_ref[...].astype(jnp.float32)                 # (Bq, G, hd)
+    G = q.shape[1]
+    hd = q.shape[2]
+    scale = 1.0 / (hd ** 0.5)
+
+    n_kv = seq_len // kv_block
+    # kv block range intersecting the union of windows of this q tile
+    if window is None:
+        lo = 0
+    else:
+        lo = jnp.maximum((q_start - window + 1) // kv_block, 0)
+    hi = jnp.minimum((q_start + q_block - 1) // kv_block + 1, n_kv) \
+        if causal else n_kv
+
+    q_pos = q_start + jax.lax.iota(jnp.int32, q_block)
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k_start = ki * kv_block
+        k = k_ref[pl.ds(k_start, kv_block), :].astype(jnp.float32)
+        v = v_ref[pl.ds(k_start, kv_block), :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q.reshape(q_block * G, hd), k,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (Bq*G, Ck)
+        s = s.reshape(q_block, G, kv_block)
+        kv_pos = k_start + jax.lax.iota(jnp.int32, kv_block)
+        mask = jnp.ones((q_block, kv_block), jnp.bool_)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask[:, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.reshape(q_block * G, kv_block), v,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).reshape(q_block, G, hd)
+        acc_new = acc * corr[..., None] + pv
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((q_block, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((q_block, G), jnp.float32)
+    a0 = jnp.zeros((q_block, G, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(lo, hi, body, (m0, l0, a0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(
+        o_ref.dtype)
+
+
+def swa_attention_fwd(q, k, v, *, window=None, causal=True,
+                      q_block=256, kv_block=256, interpret=True):
+    """q: (B, S, H, hd); k, v: (B, S, KV, hd).  Returns (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q_block = min(q_block, S)
+    kv_block = min(kv_block, S)
+    assert S % q_block == 0 and S % kv_block == 0, (S, q_block, kv_block)
+
+    # (B, S, KV, G, hd) so the grid can map (batch, kv_head, q_tile)
+    qr = q.reshape(B, S, KV, G, hd)
+
+    kernel = functools.partial(
+        _attn_kernel, window=window, causal=causal, q_block=q_block,
+        kv_block=kv_block, seq_len=S)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, S // q_block),
+        in_specs=[
+            pl.BlockSpec((None, q_block, None, G, hd),
+                         lambda b, h, qi: (b, qi, h, 0, 0)),
+            pl.BlockSpec((None, S, None, hd), lambda b, h, qi: (b, 0, h, 0)),
+            pl.BlockSpec((None, S, None, hd), lambda b, h, qi: (b, 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, q_block, None, G, hd),
+                               lambda b, h, qi: (b, qi, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(qr, k, v)
+    return out.reshape(B, S, KV * G, hd)

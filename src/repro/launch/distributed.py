@@ -1,0 +1,57 @@
+"""Multi-host / multi-pod process initialization.
+
+On a real TPU pod slice every host runs the same program;
+``jax.distributed.initialize`` wires them into one logical device mesh.
+This module is the production entry hook — the CPU dry-run never calls
+it (it fakes 512 devices in one process instead).
+
+Environment contract (set by the launch scripts in ``scripts/``):
+  REPRO_COORDINATOR   host:port of process 0 (default from TPU metadata)
+  REPRO_NUM_PROCESSES total process count (default: auto)
+  REPRO_PROCESS_ID    this process's index   (default: auto)
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def initialize_distributed() -> None:
+    """Idempotent jax.distributed bring-up from the env contract."""
+    if getattr(initialize_distributed, "_done", False):
+        return
+    kw = {}
+    if os.environ.get("REPRO_COORDINATOR"):
+        kw["coordinator_address"] = os.environ["REPRO_COORDINATOR"]
+    if os.environ.get("REPRO_NUM_PROCESSES"):
+        kw["num_processes"] = int(os.environ["REPRO_NUM_PROCESSES"])
+    if os.environ.get("REPRO_PROCESS_ID"):
+        kw["process_id"] = int(os.environ["REPRO_PROCESS_ID"])
+    # on TPU pods with no explicit env, jax autodetects via metadata
+    jax.distributed.initialize(**kw)
+    initialize_distributed._done = True
+
+
+def assert_production_topology(multi_pod: bool) -> None:
+    """Fail fast if the fleet does not match the assumed mesh."""
+    want = 512 if multi_pod else 256
+    have = jax.device_count()
+    if have != want:
+        raise RuntimeError(
+            f"expected {want} chips for the "
+            f"{'2x16x16' if multi_pod else '16x16'} mesh, found {have}; "
+            "check the slice size / REPRO_* env")
+
+
+def host_local_batch_slice(global_batch: int):
+    """Index range of the global batch this host should feed.
+
+    Data loading is host-sharded: each host materializes only its slice
+    and ``jax.make_array_from_process_local_data`` assembles the global
+    array (see launch/train.py for the single-host fallback path).
+    """
+    n = jax.process_count()
+    i = jax.process_index()
+    per = global_batch // n
+    return i * per, (i + 1) * per

@@ -1,0 +1,275 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run driver (deliverable e).
+
+Lowers + compiles every (architecture × input shape) combination on the
+production meshes — 16x16 single-pod and 2x16x16 multi-pod — with 512
+placeholder host devices (the two lines above MUST precede any other
+import; jax pins the device count at first init).
+
+For each combination, records:
+  * ``compiled.memory_analysis()``  (per-device bytes — proves fit)
+  * ``compiled.cost_analysis()``    (raw HLO flops/bytes; scan caveat)
+  * collective op counts/bytes parsed from the post-SPMD HLO
+    (``repro.costmodel.hlo_analysis``) with while-loop multipliers
+  * analytic FLOPs / 6ND model FLOPs (``repro.costmodel.flops``)
+  * the three roofline terms (``repro.costmodel.roofline``)
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--strategy allreduce]
+Results land in ``results/dryrun/<arch>__<shape>__<mesh>[__tag].json``.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.configs.base import INPUT_SHAPES, ModelConfig, get_config
+from repro.core import build_serve_step, build_train_step, get_strategy
+from repro.core import sharding as shardlib
+from repro.costmodel import flops as flopslib
+from repro.costmodel.hlo_analysis import analyze_collectives
+from repro.costmodel.roofline import roofline
+from repro.launch.mesh import data_axes_of, make_production_mesh
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# archs whose fp32 optimizer state cannot fit 16GB HBM without ZeRO
+# (params·2B + m,v·8B sharded over the 16-way model axis alone exceeds HBM)
+FSDP_REQUIRED = {"mixtral-8x22b", "mixtral-8x7b", "pixtral-12b"}
+
+TRANSFORMER_ARCHS = [
+    "mixtral-8x22b", "gemma3-4b", "mixtral-8x7b", "rwkv6-7b", "pixtral-12b",
+    "smollm-135m", "whisper-small", "phi3-mini-3.8b", "recurrentgemma-2b",
+    "qwen1.5-4b",
+]
+
+
+def _extras_sds(cfg, batch, mesh, dp):
+    out = {}
+    shard = NamedSharding(mesh, P(dp if batch > 1 else None))
+    if cfg.family == "vlm":
+        out["patch_emb"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=shard)
+    if cfg.is_encoder_decoder:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=shard)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh, data_axes=None):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    shp = INPUT_SHAPES[shape_name]
+    dp = data_axes or data_axes_of(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    tok_shard = NamedSharding(mesh, P(dp))
+    B, S = shp.global_batch, shp.seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32,
+                                            sharding=tok_shard)}
+    if shp.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32,
+                                               sharding=tok_shard)
+    batch.update(_extras_sds(cfg, B, mesh, dp))
+    return batch
+
+
+def _mem_dict(ma):
+    return {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "code_bytes": ma.generated_code_size_in_bytes,
+        "peak_estimate_gb": (ma.argument_size_in_bytes
+                             + ma.output_size_in_bytes
+                             + ma.temp_size_in_bytes) / 2**30,
+    }
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               strategy: str = "allreduce", fsdp=None,
+               profile: str = "baseline", tag: str = "",
+               save: bool = True, fsdp_rs_dtype="float32",
+               remat: bool = True, kv_quant: bool = False) -> dict:
+    """``profile`` selects the sharding scheme (hillclimb material):
+      baseline  16-way TP (model axis) × data-parallel strategies
+      dp        pure data parallelism over every mesh axis, no TP
+      zero3     pure DP + parameters/optimizer sharded over all axes
+    """
+    from repro.models import build_model
+
+    cfg = get_config(arch)
+    shp = INPUT_SHAPES[shape_name]
+    if shp.name == "long_500k" and cfg.long_context == "skip":
+        res = {"arch": arch, "shape": shape_name, "skipped":
+               "long_500k skipped for this arch (DESIGN.md §3)"}
+        if save:
+            _save(res, arch, shape_name, multi_pod, tag)
+        return res
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    data_axes = data_axes_of(mesh)
+    model_axis = "model"
+    if profile in ("dp", "zero3"):
+        data_axes = tuple(mesh.axis_names)
+        model_axis = None
+        fsdp = profile == "zero3"
+    if fsdp is None:
+        fsdp = arch in FSDP_REQUIRED
+    swa_variant = (shp.name == "long_500k" and cfg.long_context == "swa")
+
+    model = build_model(cfg, remat=remat, kv_quant=kv_quant)
+    t0 = time.time()
+    if shp.kind == "train":
+        ts = build_train_step(model, optim.adamw(3e-4),
+                              get_strategy(strategy), mesh,
+                              data_axes=data_axes, fsdp=fsdp,
+                              model_axis=model_axis,
+                              fsdp_rs_dtype=jnp.dtype(fsdp_rs_dtype))
+        args = (ts.state_sds(), input_specs(cfg, shape_name, mesh,
+                                            data_axes))
+        lowered = ts.step_fn.lower(*args)
+    else:
+        ss = build_serve_step(model, mesh, data_axes=data_axes,
+                              batch_size=shp.global_batch,
+                              cache_len=shp.seq_len,
+                              swa_variant=swa_variant)
+        params_sds = jax.tree.map(
+            lambda l, sh: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                               sharding=sh),
+            jax.eval_shape(model.init, jax.random.PRNGKey(0)),
+            ss.param_shardings)
+        if shp.kind == "prefill":
+            batch = input_specs(cfg, shape_name, mesh)
+            lowered = ss.prefill_fn.lower(params_sds, batch)
+        else:
+            token, cache_sds, pos = ss.make_inputs("decode", shp.seq_len)
+            lowered = ss.decode_fn.lower(params_sds, token, cache_sds, pos)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = dict(compiled.cost_analysis() or {})
+    hlo = compiled.as_text()
+    coll = analyze_collectives(hlo)
+
+    # ---- analytic roofline terms ----
+    if shp.kind == "train":
+        flops_g = flopslib.train_step_flops(cfg, shp.global_batch,
+                                            shp.seq_len)
+        tokens = shp.global_batch * shp.seq_len
+    elif shp.kind == "prefill":
+        flops_g = flopslib.forward_flops(cfg, shp.global_batch, shp.seq_len,
+                                         "prefill")
+        tokens = shp.global_batch * shp.seq_len
+    else:
+        flops_g = flopslib.forward_flops(cfg, shp.global_batch, shp.seq_len,
+                                         "decode")
+        tokens = shp.global_batch
+    # 6ND for train (fwd+bwd), 2ND for forward-only (prefill/decode)
+    nd = flopslib.active_param_count(cfg) * tokens
+    model_flops = 6.0 * nd if shp.kind == "train" else 2.0 * nd
+    hbm_per_dev = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                   + 2 * ma.temp_size_in_bytes)
+    rf = roofline(flops_g, hbm_per_dev, coll.wire_bytes, chips, model_flops)
+
+    if profile != "baseline" and not tag:
+        tag = profile
+    res = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips, "strategy": strategy if shp.kind == "train" else None,
+        "fsdp": fsdp, "swa_variant": swa_variant, "profile": profile,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": _mem_dict(ma),
+        "cost_analysis_raw": {k: ca.get(k) for k in
+                              ("flops", "bytes accessed") if k in ca},
+        "collectives": {
+            "counts": coll.counts,
+            "bytes_by_kind": coll.bytes_by_kind,
+            "total_bytes_per_device": coll.total_bytes,
+            "wire_bytes_per_device": coll.wire_bytes,
+            "unresolved_loops": coll.unresolved_loops,
+        },
+        "analytic": {
+            "flops_global": flops_g,
+            "model_flops_6nd": model_flops,
+            "params": flopslib.param_count(cfg),
+            "active_params": flopslib.active_param_count(cfg),
+        },
+        "roofline": rf.as_dict(),
+    }
+    if save:
+        _save(res, arch, shape_name, multi_pod, tag)
+    return res
+
+
+def _save(res, arch, shape_name, multi_pod, tag):
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    name = f"{arch}__{shape_name}__{mesh_tag}"
+    if tag:
+        name += f"__{tag}"
+    with open(RESULTS_DIR / f"{name}.json", "w") as f:
+        json.dump(res, f, indent=2, default=float)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--strategy", default="allreduce")
+    ap.add_argument("--fsdp", action="store_true", default=None)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = TRANSFORMER_ARCHS if args.all or not args.arch else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.all or not args.shape \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                label = f"{arch} × {shape} × {'2x16x16' if mp else '16x16'}"
+                try:
+                    r = dryrun_one(arch, shape, multi_pod=mp,
+                                   strategy=args.strategy, fsdp=args.fsdp,
+                                   tag=args.tag)
+                    if "skipped" in r:
+                        print(f"[skip] {label}: {r['skipped']}")
+                        continue
+                    rf = r["roofline"]
+                    print(f"[ok]   {label}: compile {r['compile_s']}s "
+                          f"mem {r['memory']['peak_estimate_gb']:.2f}GB "
+                          f"dominant={rf['dominant']} "
+                          f"t*={rf['step_time_lower_bound_s']:.4f}s")
+                except Exception as e:
+                    failures.append((label, repr(e)))
+                    print(f"[FAIL] {label}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        raise SystemExit(1)
+    print("\nAll dry-runs compiled.")
+
+
+if __name__ == "__main__":
+    main()

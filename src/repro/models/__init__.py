@@ -1,0 +1,2 @@
+from repro.models.transformer import Model, build_model  # noqa: F401
+from repro.models.cnn import CNNModel, build_cnn  # noqa: F401

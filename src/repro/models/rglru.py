@@ -1,0 +1,99 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+    a_t = exp(-c * softplus(Lambda) * sigmoid(W_a x_t))
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Diagonal recurrence => parallelized with ``jax.lax.associative_scan``
+over time (the TPU-native form; a GPU implementation would use a fused
+linear-scan kernel).  The block is Griffin's recurrent block: linear in,
+short temporal conv, RG-LRU, gated linear out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+_C = 8.0  # Griffin's recurrence sharpness constant
+
+
+def rglru_init(key, cfg, dtype):
+    d, w = cfg.d_model, cfg.rglru_width
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": layers.dense_init(ks[0], (d, w), dtype),
+        "w_gate_in": layers.dense_init(ks[1], (d, w), dtype),
+        "w_a": layers.dense_init(ks[2], (w, w), dtype, scale=0.01),
+        "w_i": layers.dense_init(ks[3], (w, w), dtype, scale=0.01),
+        "lam": jnp.full((w,), 2.0, jnp.float32),   # softplus(2) ≈ 2.1
+        "conv_w": (jax.random.normal(ks[4], (cfg.conv_width, w), jnp.float32)
+                   * 0.1).astype(dtype),
+        "w_out": layers.dense_init(ks[5], (w, d), dtype),
+    }
+
+
+def _gates(p, u):
+    """u: (B, T, w) post-conv activations -> (a, gated_input) in fp32."""
+    uf = u.astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(p["lam"]) * jax.nn.sigmoid(
+        uf @ p["w_a"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    i = jax.nn.sigmoid(uf @ p["w_i"].astype(jnp.float32))
+    x_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, x_in
+
+
+def _conv(p, u, conv_state):
+    """Causal depthwise temporal conv, width cfg.conv_width.
+
+    u: (B, T, w); conv_state: (B, cw-1, w) trailing inputs of the previous
+    segment.  Returns (out, new_conv_state).
+    """
+    cw = p["conv_w"].shape[0]
+    full = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)
+    out = sum(full[:, i:i + u.shape[1], :] * p["conv_w"][i]
+              for i in range(cw))
+    return out, full[:, -(cw - 1):, :]
+
+
+def rglru_apply(p, x, cfg, state=None):
+    """Full-sequence form. x: (B, T, d) -> (y, new_state)."""
+    B, T, d = x.shape
+    w = cfg.rglru_width
+    if state is None:
+        state = rglru_init_state(cfg, B, x.dtype)
+    u = x @ p["w_in"]
+    gate = jax.nn.gelu(x @ p["w_gate_in"])
+    u, conv_state = _conv(p, u, state["conv"])
+    a, x_in = _gates(p, u)
+
+    # associative scan over time: (a, b) pairs compose as
+    # (a2*a1, a2*b1 + b2); seed position 0 with the carried h.
+    x_in = x_in.at[:, 0, :].add(a[:, 0, :] * state["h"])
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, x_in), axis=1)
+    y = (h.astype(x.dtype) * gate) @ p["w_out"]
+    return y, {"h": h[:, -1, :], "conv": conv_state}
+
+
+def rglru_decode_step(p, x, cfg, state):
+    """Single-token recurrence. x: (B, 1, d)."""
+    u = x @ p["w_in"]
+    gate = jax.nn.gelu(x @ p["w_gate_in"])
+    u, conv_state = _conv(p, u, state["conv"])
+    a, x_in = _gates(p, u)
+    h = a[:, 0] * state["h"] + x_in[:, 0]
+    y = (h[:, None, :].astype(x.dtype) * gate) @ p["w_out"]
+    return y, {"h": h, "conv": conv_state}
+
+
+def rglru_init_state(cfg, batch, dtype):
+    w = cfg.rglru_width
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype)}

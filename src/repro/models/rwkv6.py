@@ -1,0 +1,218 @@
+"""RWKV-6 (Finch) time-mix block: linear recurrence with data-dependent
+per-channel decay [arXiv:2404.05892], in chunked (GLA-style) parallel form.
+
+Per head (head dim N):   S_t = diag(w_t) S_{t-1} + k_t^T v_t
+                         y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+with w_t in (0,1) data-dependent (token-shifted low-rank projection).
+The chunked form computes, per chunk of length c:
+  - intra-chunk: masked attention with decay ratios Lam_t / Lam_s
+  - inter-chunk: state carried through a lax.scan over chunks
+This is the TPU-native adaptation (MXU-friendly matmuls instead of a
+length-T elementwise scan) — see DESIGN.md §5.
+
+Decode uses the exact single-step recurrence against a (H, N, N) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def rwkv_init(key, cfg, dtype):
+    d = cfg.d_model
+    N = cfg.rwkv_head_dim
+    H = d // N
+    r = cfg.rwkv_lora_rank
+    ks = jax.random.split(key, 10)
+    return {
+        "w_r": layers.dense_init(ks[0], (d, d), dtype),
+        "w_k": layers.dense_init(ks[1], (d, d), dtype),
+        "w_v": layers.dense_init(ks[2], (d, d), dtype),
+        "w_g": layers.dense_init(ks[3], (d, d), dtype),
+        "w_o": layers.dense_init(ks[4], (d, d), dtype),
+        # data-dependent decay: low-rank ("lora") projection of shifted x
+        "decay_a": layers.dense_init(ks[5], (d, r), dtype),
+        "decay_b": layers.dense_init(ks[6], (r, d), dtype),
+        "decay_base": jnp.full((d,), -6.0, jnp.float32),  # ~exp(-exp(-6)) ≈ slow
+        "bonus_u": jnp.zeros((H, N), jnp.float32),
+        # token-shift mixing coefficients
+        "mix": jnp.full((5, d), 0.5, jnp.float32),
+    }
+
+
+def _token_shift(x, x_prev_last):
+    """shift along time: out_t = x_{t-1}; position 0 uses carry."""
+    prev = jnp.concatenate([x_prev_last[:, None, :], x[:, :-1, :]], axis=1)
+    return prev
+
+
+def _project(p, x, prev_last):
+    """Compute r,k,v,g,w for a chunk of tokens. x: (B, T, d)."""
+    xs = _token_shift(x, prev_last)
+    mix = p["mix"].astype(x.dtype)
+    xr = x * mix[0] + xs * (1 - mix[0])
+    xk = x * mix[1] + xs * (1 - mix[1])
+    xv = x * mix[2] + xs * (1 - mix[2])
+    xg = x * mix[3] + xs * (1 - mix[3])
+    xw = x * mix[4] + xs * (1 - mix[4])
+    r = xr @ p["w_r"]
+    k = xk @ p["w_k"]
+    v = xv @ p["w_v"]
+    g = jax.nn.silu(xg @ p["w_g"])
+    # decay in (0,1): w = exp(-exp(base + lora(xw)))
+    dw = (xw @ p["decay_a"]) @ p["decay_b"]
+    logw = -jnp.exp(p["decay_base"].astype(jnp.float32)
+                    + dw.astype(jnp.float32))          # (B,T,d) in (-inf, 0)
+    return r, k, v, g, logw
+
+
+def wkv_chunked_jnp(rr, kk, vv, lw, u, S0, chunk=128):
+    """Pure-jnp chunked WKV core.  rr/kk/vv/lw: (B, T, H, N) fp32;
+    u: (H, N); S0: (B, H, N, N).  Returns (y (B,T,H,N), S_final).
+
+    Same math as the Pallas kernel (repro.kernels.wkv6) — this is its
+    differentiable/backward form and the CPU lowering path."""
+    B, T, H, N = rr.shape
+    c = min(chunk, T)
+    if T % c:
+        T_main = (T // c) * c
+        if T_main:
+            y1, S0 = wkv_chunked_jnp(rr[:, :T_main], kk[:, :T_main],
+                                     vv[:, :T_main], lw[:, :T_main], u,
+                                     S0, chunk=c)
+            y2, S0 = wkv_chunked_jnp(rr[:, T_main:], kk[:, T_main:],
+                                     vv[:, T_main:], lw[:, T_main:], u,
+                                     S0, chunk=T - T_main)
+            return jnp.concatenate([y1, y2], axis=1), S0
+        c = T
+    nchunk = T // c
+
+    def chunk_step(S, args):
+        rr, kk, vv, lw = args                               # (B,c,H,N)
+
+        # cumulative log-decay INCLUSIVE of step t: L_t = sum_{s<=t} logw_s
+        L = jnp.cumsum(lw, axis=1)                          # (B,c,H,N)
+        # inter-chunk: y_inter[t] = (r_t * exp(L_{t-1})) @ S_prev
+        Lprev = L - lw                                      # exclusive cumsum
+        q_dec = rr * jnp.exp(Lprev)
+        y_inter = jnp.einsum("bthn,bhnm->bthm", q_dec, S)
+        # intra-chunk: att[t,s] = sum_n r_t[n] exp(L_{t-1}-L_s)[n] k_s[n], s<t
+        #   (S_{t-1} holds k_s v_s decayed by prod_{j=s+1..t-1} w_j
+        #    = exp(Lprev_t - L_s), which is <= 0 in log space for s < t —
+        #    so exponentiate the pairwise DIFFERENCE directly; the factored
+        #    form exp(Lprev)*exp(-L) overflows under strong decay).
+        diff = Lprev[:, :, None] - L[:, None, :]            # (B,t,s,H,N) <= 0
+        tidx = jnp.arange(c)
+        mask = tidx[:, None] > tidx[None, :]                # strict lower tri
+        diff = jnp.where(mask[None, :, :, None, None], diff, -jnp.inf)
+        a = jnp.einsum("bthn,bshn,btshn->bhts", rr, kk, jnp.exp(diff))
+        y_intra = jnp.einsum("bhts,bshn->bthn", a, vv)
+        # bonus (current token): y += (r_t · (u ⊙ k_t)) v_t
+        bonus = jnp.einsum("bthn,hn,bthn->bth", rr, u, kk)
+        y_bonus = bonus[..., None] * vv
+        y = y_inter + y_intra + y_bonus                     # (B,c,H,N)
+
+        # state update: S_new = diag(exp(L_c)) S + sum_s exp(L_c - L_s) k_s v_s
+        Lc = L[:, -1][:, :, :, None]                        # (B,H,N,1)
+        k_dec = kk * jnp.exp(L[:, -1][:, None] - L)         # (B,c,H,N)
+        S_new = jnp.exp(Lc) * S + jnp.einsum("bshn,bshm->bhnm", k_dec, vv)
+        return S_new, y
+
+    split = lambda a: a.reshape(B, nchunk, c, H, N).swapaxes(0, 1)
+    S_fin, ys = jax.lax.scan(chunk_step, S0,
+                             (split(rr), split(kk), split(vv), split(lw)))
+    y = ys.swapaxes(0, 1).reshape(B, nchunk * c, H, N)
+    return y, S_fin
+
+
+def rwkv_apply(p, x, cfg, state=None, chunk=128, use_kernel=False):
+    """Full-sequence (train/prefill) chunked form.
+
+    x: (B, T, d).  state: optional dict from a previous call.
+    ``use_kernel`` routes the WKV core through the Pallas kernel
+    (fresh-state path only; custom-VJP backward recomputes via the jnp
+    chunked form).  Returns (y, new_state).
+    """
+    B, T, d = x.shape
+    N = cfg.rwkv_head_dim
+    H = d // N
+    fresh = state is None
+    if state is None:
+        state = rwkv_init_state(cfg, B, x.dtype)
+
+    # token-shift over the full sequence (carry supplies position 0)
+    r, k, v, g, logw = _project(p, x, state["x_last"])
+    hint = lambda t: layers.shard_hint(t, None, None, "model", None)
+    rr = hint(r.reshape(B, T, H, N).astype(jnp.float32))
+    kk = hint(k.reshape(B, T, H, N).astype(jnp.float32))
+    vv = hint(v.reshape(B, T, H, N).astype(jnp.float32))
+    lw = hint(logw.reshape(B, T, H, N))
+    u = p["bonus_u"].astype(jnp.float32)
+
+    if use_kernel and fresh and T % 64 == 0:
+        # Pallas WKV kernel (zero initial state); final state from a
+        # single closed-form einsum: S_T = sum_s exp(L_T - L_s) k_s v_s
+        y = _wkv_kernel_vjp(rr, kk, vv, lw, u)
+        L = jnp.cumsum(lw, axis=1)
+        k_dec = kk * jnp.exp(L[:, -1:] - L)
+        S_fin = jnp.einsum("bthn,bthm->bhnm", k_dec, vv)
+    else:
+        y, S_fin = wkv_chunked_jnp(rr, kk, vv, lw, u, state["S"],
+                                   chunk=chunk)
+    y = y.reshape(B, T, d) * g.astype(jnp.float32)
+    out = (y @ p["w_o"]).astype(x.dtype)
+    return out, {"S": S_fin, "x_last": x[:, -1, :]}
+
+
+@jax.custom_vjp
+def _wkv_kernel_vjp(rr, kk, vv, lw, u):
+    from repro.kernels import ops as kops
+    return kops.wkv6(rr, kk, vv, lw, u)
+
+
+def _wkv_fwd(rr, kk, vv, lw, u):
+    return _wkv_kernel_vjp(rr, kk, vv, lw, u), (rr, kk, vv, lw, u)
+
+
+def _wkv_bwd(res, gy):
+    rr, kk, vv, lw, u = res
+    B, T, H, N = rr.shape
+    S0 = jnp.zeros((B, H, N, N), jnp.float32)
+    _, vjp = jax.vjp(
+        lambda r_, k_, v_, l_, u_: wkv_chunked_jnp(r_, k_, v_, l_, u_,
+                                                   S0)[0],
+        rr, kk, vv, lw, u)
+    return vjp(gy)
+
+
+_wkv_kernel_vjp.defvjp(_wkv_fwd, _wkv_bwd)
+
+
+def rwkv_decode_step(p, x, cfg, state):
+    """Exact single-token recurrence. x: (B, 1, d)."""
+    B, _, d = x.shape
+    N = cfg.rwkv_head_dim
+    H = d // N
+    r, k, v, g, logw = _project(p, x, state["x_last"])
+    rr = r.reshape(B, H, N).astype(jnp.float32)
+    kk = k.reshape(B, H, N).astype(jnp.float32)
+    vv = v.reshape(B, H, N).astype(jnp.float32)
+    w = jnp.exp(logw.reshape(B, H, N))
+    u = p["bonus_u"].astype(jnp.float32)
+    S = state["S"]                                          # (B,H,N,N)
+    kv = jnp.einsum("bhn,bhm->bhnm", kk, vv)
+    y = jnp.einsum("bhn,bhnm->bhm", rr, S + u[None, :, :, None] * kv)
+    S_new = w[..., None] * S + kv
+    y = y.reshape(B, 1, d) * g.astype(jnp.float32)
+    return (y @ p["w_o"]).astype(x.dtype), {"S": S_new, "x_last": x[:, -1, :]}
+
+
+def rwkv_init_state(cfg, batch, dtype):
+    d = cfg.d_model
+    N = cfg.rwkv_head_dim
+    H = d // N
+    return {"S": jnp.zeros((batch, H, N, N), jnp.float32),
+            "x_last": jnp.zeros((batch, d), dtype)}

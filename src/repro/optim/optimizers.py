@@ -1,0 +1,96 @@
+"""Optimizers (pytree-functional, optax-style but self-contained).
+
+``adamw`` has a fused-Pallas path (``repro.kernels.fused_adamw``) — the
+TPU analogue of SPIRT's in-database model update (state stays resident
+next to compute; one fused pass over params instead of separate
+m/v/param sweeps).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]   # (grads, state, params) -> (updates, state)
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {"step": jnp.zeros((), jnp.int32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                   params)}
+
+    def update(grads, state, params):
+        del params
+        step = state["step"] + 1
+        if momentum == 0.0:
+            ups = jax.tree.map(lambda g: (-lr * g).astype(g.dtype), grads)
+            return ups, {"step": step}
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        ups = jax.tree.map(lambda m, g: (-lr * m).astype(g.dtype), mu, grads)
+        return ups, {"step": step, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, use_fused: bool = False) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        if use_fused:
+            from repro.kernels import ops as kops
+
+            def upd(g, m, v, p):
+                return kops.fused_adamw(g, m, v, p, lr=lr, b1=b1, b2=b2,
+                                        eps=eps, wd=weight_decay,
+                                        c1=c1, c2=c2)
+            out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+            ups = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda o: isinstance(o, tuple))
+            m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda o: isinstance(o, tuple))
+            v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda o: isinstance(o, tuple))
+            return ups, {"step": step, "m": m, "v": v}
+
+        def moments(g, m, v):
+            gf = g.astype(jnp.float32)
+            return b1 * m + (1 - b1) * gf, b2 * v + (1 - b2) * gf * gf
+
+        mv = jax.tree.map(moments, grads, state["m"], state["v"])
+        m = jax.tree.map(lambda t: t[0], mv,
+                         is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree.map(lambda t: t[1], mv,
+                         is_leaf=lambda t: isinstance(t, tuple))
+
+        def upd(m_, v_, p):
+            u = -lr * ((m_ / c1) / (jnp.sqrt(v_ / c2) + eps)
+                       + weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype)
+
+        ups = jax.tree.map(upd, m, v, params)
+        return ups, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)).astype(p.dtype),
+                        params, updates)

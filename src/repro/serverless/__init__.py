@@ -1,0 +1,4 @@
+from repro.serverless.simulator import (  # noqa: F401
+    Channel, EpochReport, PAPER_TABLE2, REDIS, S3, ServerlessSetup,
+    paper_cost_check, simulate_epoch,
+)

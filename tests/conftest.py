@@ -1,0 +1,14 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here —
+smoke tests and benches must see 1 device (the dry-run sets its own)."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test")

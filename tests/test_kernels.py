@@ -1,0 +1,141 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RS = np.random.RandomState(0)
+
+
+# ---------------------------------------------------------------------------
+# sliding-window flash attention
+# ---------------------------------------------------------------------------
+SWA_CASES = [
+    # (B, S, H, KV, hd, window, dtype)
+    (2, 256, 4, 2, 64, None, jnp.float32),
+    (1, 512, 8, 8, 128, 128, jnp.float32),
+    (2, 256, 4, 1, 32, 64, jnp.bfloat16),
+    (1, 128, 2, 2, 64, None, jnp.bfloat16),
+    (1, 256, 6, 3, 32, 32, jnp.float32),
+    (3, 128, 4, 4, 128, 96, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd,window,dtype", SWA_CASES)
+def test_swa_kernel_vs_ref(B, S, H, KV, hd, window, dtype):
+    q = jnp.asarray(RS.randn(B, S, H, hd), dtype)
+    k = jnp.asarray(RS.randn(B, S, KV, hd), dtype)
+    v = jnp.asarray(RS.randn(B, S, KV, hd), dtype)
+    out = ops.swa_attention(q, k, v, window=window)
+    expect = ref.swa_attention(q, k, v, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=tol)
+
+
+def test_swa_kernel_grad():
+    B, S, H, KV, hd = 1, 256, 4, 2, 64
+    q = jnp.asarray(RS.randn(B, S, H, hd), jnp.float32)
+    k = jnp.asarray(RS.randn(B, S, KV, hd), jnp.float32)
+    v = jnp.asarray(RS.randn(B, S, KV, hd), jnp.float32)
+    f1 = lambda *a: jnp.sum(jnp.tanh(ops.swa_attention(*a, window=64)))
+    f2 = lambda *a: jnp.sum(jnp.tanh(ref.swa_attention(*a, window=64)))
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# block significance
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,b", [(100, 128), (1000, 256), (7, 512),
+                                 (513, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_norms_vs_ref(n, b, dtype):
+    x = jnp.asarray(RS.randn(n, b), dtype)
+    from repro.kernels.block_significance import block_norms
+    got = block_norms(x, interpret=True)
+    want = ref.block_norms(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("n,b", [(64, 128), (1000, 256)])
+def test_significance_filter_conservation(n, b):
+    x = jnp.asarray(RS.randn(n, b), jnp.float32)
+    kept, resid, mask = ops.significance_filter(x, threshold=1.0)
+    k2, r2 = ref.masked_filter(x, mask)
+    np.testing.assert_allclose(np.asarray(kept), np.asarray(k2), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(resid), np.asarray(r2), atol=1e-6)
+    # error feedback conservation: kept + residual == input
+    np.testing.assert_allclose(np.asarray(kept + resid), np.asarray(x),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused adamw
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [100, 4096, 65537])
+@pytest.mark.parametrize("pdtype", [jnp.float32, jnp.bfloat16])
+def test_fused_adamw_vs_ref(n, pdtype):
+    g = jnp.asarray(RS.randn(n), pdtype)
+    m = jnp.asarray(RS.randn(n) * 0.01, jnp.float32)
+    v = jnp.abs(jnp.asarray(RS.randn(n) * 0.01, jnp.float32))
+    p = jnp.asarray(RS.randn(n), pdtype)
+    kw = dict(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, wd=0.01)
+    u1, m1, v1 = ops.fused_adamw(g, m, v, p, c1=jnp.asarray(0.1),
+                                 c2=jnp.asarray(0.05), **kw)
+    u2, m2, v2 = ref.fused_adamw_flat(g, m, v, p, jnp.asarray(0.1),
+                                      jnp.asarray(0.05), **kw)
+    np.testing.assert_allclose(np.asarray(u1, np.float32),
+                               np.asarray(u2.astype(pdtype), np.float32),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-5)
+
+
+def test_fused_adamw_optimizer_path():
+    """optim.adamw(use_fused=True) must match the unfused optimizer."""
+    from repro import optim
+    params = {"a": jnp.asarray(RS.randn(33, 7), jnp.float32),
+              "b": jnp.asarray(RS.randn(5), jnp.float32)}
+    grads = jax.tree.map(lambda p: jnp.asarray(RS.randn(*p.shape),
+                                               jnp.float32), params)
+    o1 = optim.adamw(1e-3, weight_decay=0.01)
+    o2 = optim.adamw(1e-3, weight_decay=0.01, use_fused=True)
+    s1, s2 = o1.init(params), o2.init(params)
+    u1, s1 = o1.update(grads, s1, params)
+    u2, s2 = o2.update(grads, s2, params)
+    for a, b in zip(jax.tree.leaves(u1), jax.tree.leaves(u2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 chunked wkv
+# ---------------------------------------------------------------------------
+WKV_CASES = [
+    # (B, T, H, N, chunk, dtype)
+    (2, 64, 2, 32, 16, jnp.float32),
+    (1, 128, 4, 64, 64, jnp.float32),
+    (2, 96, 3, 16, 32, jnp.float32),   # chunk auto-halves to divide T
+    (1, 64, 2, 32, 16, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,T,H,N,chunk,dtype", WKV_CASES)
+def test_wkv6_kernel_vs_exact_recurrence(B, T, H, N, chunk, dtype):
+    r = jnp.asarray(RS.randn(B, T, H, N) * 0.5, dtype)
+    k = jnp.asarray(RS.randn(B, T, H, N) * 0.5, dtype)
+    v = jnp.asarray(RS.randn(B, T, H, N) * 0.5, dtype)
+    logw = -jnp.exp(jnp.asarray(RS.randn(B, T, H, N) * 0.5 - 2.0,
+                                jnp.float32)).astype(dtype)
+    u = jnp.asarray(RS.randn(H, N) * 0.5, dtype)
+    got = ops.wkv6(r, k, v, logw, u, chunk=chunk)
+    want = ref.wkv6(r, k, v, logw, u)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)

@@ -1,0 +1,61 @@
+"""int8 KV-cache quantization: accuracy vs full-precision decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import build_model
+from repro.models.kvquant import dequantize_kv, quantize_kv
+
+
+def test_quant_roundtrip_bound():
+    x = jnp.asarray(np.random.RandomState(0).randn(4, 16, 2, 32),
+                    jnp.float32)
+    q, s = quantize_kv(x)
+    err = jnp.abs(dequantize_kv(q, s) - x)
+    bound = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    assert bool(jnp.all(err <= bound + 1e-6))
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "gemma3-4b"])
+def test_quant_decode_close_to_exact(arch):
+    cfg = get_config(arch).reduced()
+    model_fp = build_model(cfg, remat=False)
+    model_q = build_model(cfg, remat=False, kv_quant=True)
+    params = model_fp.init(jax.random.PRNGKey(0))
+    B, S = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0,
+                              cfg.vocab_size)
+    logits_fp, cache_fp = jax.jit(
+        lambda p, b: model_fp.prefill(p, b, cache_len=S + 1))(
+        params, {"tokens": toks[:, :S]})
+    logits_q, cache_q = jax.jit(
+        lambda p, b: model_q.prefill(p, b, cache_len=S + 1))(
+        params, {"tokens": toks[:, :S]})
+    # prefill logits identical (cache only affects decode)
+    np.testing.assert_allclose(np.asarray(logits_q), np.asarray(logits_fp),
+                               atol=1e-4)
+    d_fp, _ = jax.jit(lambda p, t, c: model_fp.decode_step(p, t, c, S))(
+        params, toks[:, S:], cache_fp)
+    d_q, _ = jax.jit(lambda p, t, c: model_q.decode_step(p, t, c, S))(
+        params, toks[:, S:], cache_q)
+    # int8 cache error stays small in logit space and preserves argmax
+    err = np.abs(np.asarray(d_q - d_fp)).max()
+    scale = np.abs(np.asarray(d_fp)).max()
+    assert err / scale < 0.05, (err, scale)
+    agree = (np.asarray(jnp.argmax(d_q, -1)) ==
+             np.asarray(jnp.argmax(d_fp, -1))).mean()
+    assert agree == 1.0
+
+
+def test_quant_cache_half_the_bytes():
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    m_fp = build_model(cfg, remat=False)
+    m_q = build_model(cfg, remat=False, kv_quant=True)
+    def nbytes(c):
+        return sum(np.prod(l.shape) * l.dtype.itemsize
+                   for l in jax.tree.leaves(c))
+    b_fp = nbytes(jax.eval_shape(lambda: m_fp.init_cache(2, 512)))
+    b_q = nbytes(jax.eval_shape(lambda: m_q.init_cache(2, 512)))
+    assert b_q < 0.6 * b_fp    # int8 payload + fp16 scales vs fp32

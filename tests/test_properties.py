@@ -1,0 +1,86 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.costmodel import flops, pricing
+from repro.kernels import ops, ref
+from repro.serverless import simulate_epoch
+
+
+@given(n=st.integers(1, 400), b=st.sampled_from([64, 128, 256]),
+       thr=st.floats(0.0, 3.0), seed=st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_error_feedback_conservation(n, b, thr, seed):
+    """kept + residual == gradient, for any threshold/block size."""
+    x = jnp.asarray(np.random.RandomState(seed).randn(n, b), jnp.float32)
+    kept, resid, mask = ops.significance_filter(x, thr)
+    np.testing.assert_allclose(np.asarray(kept + resid), np.asarray(x),
+                               atol=1e-5)
+    # mask semantics: kept rows equal input; dropped rows zero
+    m = np.asarray(mask)
+    np.testing.assert_allclose(np.asarray(kept)[~m], 0.0, atol=0)
+    np.testing.assert_allclose(np.asarray(kept)[m], np.asarray(x)[m],
+                               atol=1e-6)
+
+
+@given(t=st.floats(0.1, 1000), ram=st.floats(0.25, 10.0),
+       k=st.integers(1, 100))
+@settings(max_examples=50, deadline=None)
+def test_lambda_cost_linear(t, ram, k):
+    """Cost = time × RAM × rate is linear in each factor."""
+    c1 = pricing.lambda_cost(t, ram)
+    assert abs(pricing.lambda_cost(k * t, ram) - k * c1) < 1e-9 * max(k, 1)
+    assert abs(pricing.lambda_cost(t, k * ram) - k * c1) < 1e-9 * max(k, 1)
+    assert c1 >= 0
+
+
+@given(nw=st.integers(2, 32), npar=st.integers(10**4, 10**8),
+       comp=st.floats(0.01, 30.0))
+@settings(max_examples=25, deadline=None)
+def test_simulator_monotonicity(nw, npar, comp):
+    """More params => more comm time; PS-style allreduce sync grows
+    at least as fast as scatterreduce with workers."""
+    from repro.serverless.simulator import ServerlessSetup
+    setup = ServerlessSetup(n_workers=nw)
+    r1 = simulate_epoch("allreduce", n_params=npar,
+                        compute_s_per_batch=comp, setup=setup)
+    r2 = simulate_epoch("allreduce", n_params=npar * 2,
+                        compute_s_per_batch=comp, setup=setup)
+    assert r2.stages.sync >= r1.stages.sync
+    assert r1.total_cost > 0
+
+
+@given(seq=st.sampled_from([512, 4096, 32768]),
+       batch=st.sampled_from([1, 8, 256]))
+@settings(max_examples=20, deadline=None)
+def test_flops_scaling(seq, batch):
+    """Forward FLOPs scale linearly in batch and superlinearly in seq for
+    full attention archs."""
+    from repro.configs.base import get_config
+    cfg = get_config("phi3-mini-3.8b")
+    f1 = flops.forward_flops(cfg, batch, seq)
+    f2 = flops.forward_flops(cfg, 2 * batch, seq)
+    np.testing.assert_allclose(f2, 2 * f1, rtol=1e-9)
+    g1 = flops.forward_flops(cfg, batch, seq)
+    g2 = flops.forward_flops(cfg, batch, 2 * seq)
+    assert g2 > 2 * g1  # attention quadratic term
+
+
+@given(s=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_synthetic_data_learnable_structure(s):
+    """Class templates must be distinguishable from noise: same-class
+    images correlate more than cross-class on average."""
+    from repro.data import cifar_like
+    imgs, labels = cifar_like(64, seed=s)
+    flat = imgs.reshape(64, -1)
+    flat = (flat - flat.mean(1, keepdims=True))
+    flat /= np.linalg.norm(flat, axis=1, keepdims=True) + 1e-9
+    sim = flat @ flat.T
+    same = sim[labels[:, None] == labels[None, :]]
+    diff = sim[labels[:, None] != labels[None, :]]
+    assert same.mean() > diff.mean()

@@ -1,0 +1,84 @@
+"""Prefill/decode consistency: teacher-forced full forward must match
+prefill + single-token decode for every architecture family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import build_model
+
+ARCHS = ["smollm-135m", "gemma3-4b", "rwkv6-7b", "recurrentgemma-2b",
+         "mixtral-8x7b", "whisper-small", "pixtral-12b", "phi3-mini-3.8b"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.is_moe:
+        # capacity-based routing drops tokens batch-dependently; disable
+        # drops so the equality is exact
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    B, S = 2, 33
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["patch_emb"] = 0.1 * jax.random.normal(
+            key, (B, cfg.n_patches, cfg.d_model))
+    if cfg.is_encoder_decoder:
+        batch["frames"] = 0.1 * jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model))
+    logits_full, _ = jax.jit(model.apply)(params, batch)
+
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :-1]
+    logits_pre, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, cache_len=S))(params, pre)
+    np.testing.assert_allclose(
+        np.asarray(logits_pre[:, 0], np.float32),
+        np.asarray(logits_full[:, S - 2], np.float32), atol=2e-4)
+
+    logits_dec, _ = jax.jit(
+        lambda p, t, c: model.decode_step(p, t, c, S - 1))(
+        params, batch["tokens"][:, -1:], cache)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[:, 0], np.float32),
+        np.asarray(logits_full[:, S - 1], np.float32), atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "recurrentgemma-2b",
+                                  "mixtral-8x7b"])
+def test_swa_variant_decode_runs(arch):
+    """The long-context SWA variant must produce finite decode logits."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(1, 128, swa_variant=True)
+    logits, cache = jax.jit(
+        lambda p, t, c: model.decode_step(p, t, c, 0, swa_variant=True))(
+        params, jnp.zeros((1, 1), jnp.int32), cache)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_multi_token_decode_matches_forward():
+    """Decode 8 tokens sequentially == teacher-forced forward."""
+    cfg = get_config("smollm-135m").reduced()
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S, T = 1, 24, 8
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S + T), 0,
+                              cfg.vocab_size)
+    logits_full, _ = model.apply(params, {"tokens": toks})
+    _, cache = model.prefill(params, {"tokens": toks[:, :S]},
+                             cache_len=S + T)
+    dec = jax.jit(lambda p, t, c, i: model.decode_step(p, t, c, i))
+    for i in range(T):
+        logits, cache = dec(params, toks[:, S + i:S + i + 1], cache,
+                            jnp.asarray(S + i))
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0], np.float32),
+            np.asarray(logits_full[:, S + i], np.float32), atol=2e-4)
