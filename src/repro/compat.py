@@ -1,0 +1,67 @@
+"""jax version-compat helpers.
+
+``jax.shard_map`` became a public top-level API (with ``axis_names`` /
+``check_vma`` keywords) after the 0.4.x series; the installed 0.4.37
+only ships ``jax.experimental.shard_map.shard_map`` whose equivalent
+knobs are ``auto`` (the *complement* of the manual axes) and
+``check_rep``.  The same series also predates ``jax.lax.axis_size``
+and ``jax.sharding.get_abstract_mesh``.  Every such call in the repo
+goes through this module so the translation lives in exactly one place.
+"""
+from __future__ import annotations
+
+from typing import Optional, Set
+
+import jax
+
+_NEW = getattr(jax, "shard_map", None)
+
+# jax 0.4.x's *experimental* shard_map can express partial-manual
+# meshes (auto= axes), but XLA's SPMD partitioner of that era crashes
+# on them for real multi-device auto axes ("Check failed:
+# sharding.IsManualSubgroup()").  Tests that need a genuinely
+# partial-manual multi-device mesh skip unless the native API exists.
+HAS_PARTIAL_MANUAL_SHARD_MAP = _NEW is not None
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Optional[Set[str]] = None,
+              check_vma: bool = False):
+    """New-style ``jax.shard_map`` signature on any installed jax.
+
+    ``axis_names`` are the *manual* mesh axes (``None`` => all of them);
+    on old jax the remaining axes become the experimental ``auto`` set
+    and ``check_vma`` maps onto ``check_rep``.
+    """
+    if _NEW is not None:
+        kw = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs,
+              "check_vma": check_vma}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return _NEW(f, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma, auto=auto)
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a manual mesh axis, inside a shard_map body."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    from jax.core import axis_frame
+    return axis_frame(axis_name)            # returns the size on 0.4.x
+
+
+class _EmptyMesh:
+    axis_names = ()
+
+
+def get_abstract_mesh():
+    """Ambient abstract mesh, or an empty stand-in on old jax (callers
+    treat no-axes-in-scope as 'skip the sharding hint')."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    return _EmptyMesh()

@@ -48,7 +48,8 @@ class QuantizedScatterReduce(Strategy):
 
     def sync(self, grads, state, axis_names):
         axes = (axis_names,) if isinstance(axis_names, str) else axis_names
-        W = int(np.prod([jax.lax.axis_size(a) for a in axes]))
+        from repro.compat import axis_size as _axis_size
+        W = int(np.prod([_axis_size(a) for a in axes]))
 
         new_resid, out = [], []
         for g, r in zip(jax.tree.leaves(grads), jax.tree.leaves(state)):

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import axis_size as _axis_size
+
 
 def _leaf_bytes(tree) -> int:
     return sum(np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
@@ -108,7 +110,7 @@ class ScatterReduce(Strategy):
 
     def sync(self, grads, state, axis_names):
         axes = (axis_names,) if isinstance(axis_names, str) else axis_names
-        W = np.prod([jax.lax.axis_size(a) for a in axes])
+        W = np.prod([_axis_size(a) for a in axes])
 
         def one(g):
             flat = g.reshape(-1).astype(jnp.float32)
@@ -229,4 +231,15 @@ def get_strategy(name: str, **kw) -> Strategy:
     if name == "quantized_scatterreduce":    # beyond-paper (lazy import)
         from repro.core.compression import QuantizedScatterReduce
         return QuantizedScatterReduce(**kw)
+    if name in ("trimmed_mean", "coordinate_median"):
+        # byzantine-robust aggregation (SPIRT §5) — lazy import to keep
+        # core free of a hard serverless dependency
+        from repro.serverless.recovery import CoordinateMedian, TrimmedMean
+        cls = TrimmedMean if name == "trimmed_mean" else CoordinateMedian
+        return cls(**kw)
+    if name == "byzantine":
+        # fault-injection wrapper: get_strategy("byzantine",
+        #   inner=get_strategy("trimmed_mean"), workers=(0,))
+        from repro.serverless.faults import ByzantineGradients
+        return ByzantineGradients(**kw)
     return STRATEGIES[name](**kw)

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import losses, sharding
 from repro.core.strategies import Strategy
 from repro.optim.optimizers import Optimizer, apply_updates
@@ -253,7 +254,7 @@ def build_train_step(model, optimizer: Optimizer, strategy: Strategy,
 
     def make_sm(batch_keys):
         bspec = {k: P(dp) for k in batch_keys}
-        return jax.shard_map(
+        return shard_map(
             step_body, mesh=mesh,
             in_specs=(state_manual, bspec),
             out_specs=(state_manual, metrics_manual),

@@ -1,0 +1,125 @@
+"""Real-training byzantine-robustness driver (subprocess entry point).
+
+Trains the MobileNet CNN on the synthetic CIFAR set, 4-way
+data-parallel, with worker 0 wrapped in ``ByzantineGradients`` (scaled
+poisoned gradients) for the whole run, under a chosen inner aggregation
+strategy.  This is the single harness behind both
+``benchmarks/fault_tolerance.py`` (long run: does SPIRT + trimmed mean
+converge under attack?) and ``tests/test_robust_agg.py`` (short run:
+does plain averaging diverge while trimmed mean trains?).
+
+It must run in its own process so ``--xla_force_host_platform_
+device_count`` is set before jax initializes; use
+:func:`run_in_subprocess` from the parent, or directly:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \\
+    python -m repro.launch.byzantine_train --inner trimmed_mean --steps 150
+
+Prints one machine-readable line:
+
+  RESULT,inner=<name>,steps=<n>,acc=<f>,final_loss=<f>,max_loss=<f>,\\
+head_loss=<f>,tail_loss=<f>
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+from typing import Dict
+
+
+def run(inner: str = "trimmed_mean", *, steps: int = 150, batch: int = 64,
+        data_size: int = 4096, trim: int = 1, microbatches: int = 4,
+        byz_scale: float = -8.0, lr: float = 0.1,
+        eval_size: int = 512) -> Dict[str, float]:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro import optim
+    from repro.configs.base import get_config
+    from repro.core import build_train_step, get_strategy, losses
+    from repro.data import cifar_like
+    from repro.models import build_cnn
+
+    cfg = get_config("mobilenet-cifar").reduced()
+    imgs, labels = cifar_like(data_size, seed=0)
+    timgs, tlabels = cifar_like(eval_size, seed=99)
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
+    bsh = NamedSharding(mesh, P("data"))
+    model = build_cnn(cfg)
+
+    def loss_fn(params, b):
+        logits, _ = model.apply(params, b)
+        return losses.classification_loss(logits, b["labels"])
+
+    if inner in ("trimmed_mean", "coordinate_median"):
+        kw = {"trim": trim} if inner == "trimmed_mean" else {}
+        inner_strat = get_strategy(inner, microbatches=microbatches, **kw)
+    else:
+        inner_strat = get_strategy(inner)
+    strat = get_strategy("byzantine", inner=inner_strat, workers=(0,),
+                         scale=byz_scale)
+    ts = build_train_step(model, optim.sgd(lr, momentum=0.9), strat, mesh,
+                          loss_fn=loss_fn)
+    state = ts.init_state(jax.random.PRNGKey(0))
+    rs = np.random.RandomState(0)
+    seen = []
+    for _ in range(steps):
+        idx = rs.randint(0, len(imgs), batch)
+        b = {"images": jax.device_put(jnp.asarray(imgs[idx]), bsh),
+             "labels": jax.device_put(jnp.asarray(labels[idx]), bsh)}
+        state, m = ts.step_fn(state, b)
+        seen.append(float(m["loss"]))
+    logits, _ = jax.jit(model.apply)(state["params"],
+                                     {"images": jnp.asarray(timgs)})
+    acc = float(losses.accuracy(logits, jnp.asarray(tlabels)))
+    k = min(10, len(seen))
+    return {"acc": acc, "final_loss": seen[-1], "max_loss": max(seen),
+            "head_loss": float(np.mean(seen[:k])),
+            "tail_loss": float(np.mean(seen[-k:]))}
+
+
+def run_in_subprocess(inner: str, *, steps: int, data_size: int = 4096,
+                      devices: int = 4,
+                      timeout: float = 1800.0) -> Dict[str, float]:
+    """Spawn this module with its own XLA device count; parse RESULT."""
+    import repro
+    # repro is a namespace package (__file__ is None): resolve src/ from
+    # its search path
+    src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.byzantine_train",
+         "--inner", inner, "--steps", str(steps),
+         "--data-size", str(data_size)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr[-3000:])
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("RESULT,")][-1]
+    fields = dict(kv.split("=", 1) for kv in line.split(",")[1:])
+    return {k: (v if k == "inner" else float(v))
+            for k, v in fields.items()}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--inner", default="trimmed_mean")
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--data-size", type=int, default=4096)
+    args = ap.parse_args()
+    r = run(args.inner, steps=args.steps, data_size=args.data_size)
+    print(f"RESULT,inner={args.inner},steps={args.steps},"
+          f"acc={r['acc']},final_loss={r['final_loss']},"
+          f"max_loss={r['max_loss']},head_loss={r['head_loss']},"
+          f"tail_loss={r['tail_loss']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,8 @@ def shard_hint(x, *axes):
     ``axes`` entries are mesh-axis names (or None) per tensor dim; axes
     not present in the current abstract mesh are dropped, so model code
     stays mesh-agnostic (no-op on CPU tests / 1x1 meshes)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.compat import get_abstract_mesh
+    mesh = get_abstract_mesh()
     names = getattr(mesh, "axis_names", ()) or ()
     try:  # only Auto axes may appear in with_sharding_constraint specs
         types = dict(zip(names, mesh.axis_types))

@@ -1,4 +1,18 @@
 from repro.serverless.simulator import (  # noqa: F401
-    Channel, EpochReport, PAPER_TABLE2, REDIS, S3, ServerlessSetup,
-    paper_cost_check, simulate_epoch,
+    ARCHS, Channel, EpochReport, PAPER_TABLE2, REDIS, RoundPlan, S3,
+    ServerlessSetup, paper_cost_check, round_plan, simulate_epoch,
+)
+from repro.serverless.runtime import (  # noqa: F401
+    EventRuntime, RuntimeReport, run_event_epoch,
+)
+from repro.serverless.faults import (  # noqa: F401
+    ByzantineGradients, ByzantineWorker, ColdStartStorm, FaultPlan,
+    Straggler, WorkerCrash,
+)
+from repro.serverless.recovery import (  # noqa: F401
+    CheckpointRestore, CoordinateMedian, PeerTakeover, RecoveryEvent,
+    RecoveryPolicy, TrimmedMean, coordinate_median, trimmed_mean,
+)
+from repro.serverless.autoscale import (  # noqa: F401
+    ReactiveAutoscaler, ScheduledScaler,
 )

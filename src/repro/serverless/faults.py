@@ -1,0 +1,190 @@
+"""Fault taxonomy + seeded injection for the serverless event runtime.
+
+Four fault classes, matching the failure modes the paper's
+fault-tolerance comparison (and SPIRT's §5 / MLLess's §6 evaluations)
+is about:
+
+  WorkerCrash     a Lambda invocation dies mid-epoch; its in-flight
+                  round is lost.  What happens next is the recovery
+                  policy's job (``recovery.py``): checkpoint-restore
+                  re-invokes and replays, SPIRT peer takeover reassigns
+                  the partition because state lives in the database.
+  Straggler       a worker computes ``slowdown`` x slower inside a time
+                  window (noisy neighbour / throttled vCPU).  Under
+                  synchronous training every barrier inherits the
+                  straggler's finish time.
+  ColdStartStorm  a fraction of the fleet pays ``extra_s`` additional
+                  cold start (concurrent-invocation burst, arXiv
+                  2105.07806's dominant serverless overhead).
+  ByzantineWorker a worker ships poisoned (scaled) gradients.  Timing
+                  is unaffected; correctness bookkeeping flows through
+                  the runtime's robust-aggregation accounting, and the
+                  *real-training* analogue is :class:`ByzantineGradients`
+                  below.
+
+``FaultPlan`` bundles specs; ``FaultPlan.random`` draws a reproducible
+plan from per-class rates with a seeded RNG, so every experiment is
+replayable from (seed, rates).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerCrash:
+    worker: int
+    time_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Straggler:
+    worker: int
+    slowdown: float = 4.0
+    start_s: float = 0.0
+    end_s: float = math.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class ColdStartStorm:
+    extra_s: float = 10.0
+    fraction: float = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class ByzantineWorker:
+    worker: int
+    scale: float = -10.0
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """An immutable, fully-resolved set of faults for one epoch run."""
+    crashes: Tuple[WorkerCrash, ...] = ()
+    stragglers: Tuple[Straggler, ...] = ()
+    storm: Optional[ColdStartStorm] = None
+    byzantine: Tuple[ByzantineWorker, ...] = ()
+    seed: int = 0
+
+    def storm_victims(self, n_workers: int) -> Tuple[int, ...]:
+        """Seeded choice of which workers the cold-start storm hits."""
+        if self.storm is None:
+            return ()
+        rng = np.random.RandomState(self.seed)
+        k = max(1, int(round(self.storm.fraction * n_workers)))
+        return tuple(sorted(rng.choice(n_workers, size=k, replace=False)))
+
+    def slowdown(self, worker: int, t: float) -> float:
+        f = 1.0
+        for s in self.stragglers:
+            if s.worker == worker and s.start_s <= t < s.end_s:
+                f = max(f, s.slowdown)
+        return f
+
+    def byzantine_workers(self) -> Tuple[int, ...]:
+        return tuple(sorted({b.worker for b in self.byzantine}))
+
+    @classmethod
+    def random(cls, *, seed: int, n_workers: int, horizon_s: float,
+               crash_rate: float = 0.0, straggler_rate: float = 0.0,
+               byzantine_fraction: float = 0.0,
+               storm_prob: float = 0.0) -> "FaultPlan":
+        """Draw a reproducible plan.  Rates are expected events per
+        worker per epoch (Poisson-thinned to at most one per worker)."""
+        rng = np.random.RandomState(seed)
+        crashes, stragglers, byz = [], [], []
+        for w in range(n_workers):
+            if rng.rand() < crash_rate:
+                crashes.append(WorkerCrash(w, float(
+                    rng.uniform(0.1, 0.9) * horizon_s)))
+            if rng.rand() < straggler_rate:
+                t0 = float(rng.uniform(0.0, 0.7) * horizon_s)
+                stragglers.append(Straggler(
+                    w, slowdown=float(rng.uniform(2.0, 6.0)),
+                    start_s=t0, end_s=t0 + 0.3 * horizon_s))
+        n_byz = int(round(byzantine_fraction * n_workers))
+        for w in rng.choice(n_workers, size=n_byz, replace=False):
+            byz.append(ByzantineWorker(int(w)))
+        storm = ColdStartStorm() if rng.rand() < storm_prob else None
+        return cls(crashes=tuple(crashes), stragglers=tuple(stragglers),
+                   storm=storm, byzantine=tuple(byz), seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Real-training byzantine injection: a composable Strategy wrapper
+# ---------------------------------------------------------------------------
+def _linear_axis_index(axis_names):
+    """Flattened data-parallel worker index inside a shard_map body."""
+    import jax
+
+    from repro.compat import axis_size
+    axes = (axis_names,) if isinstance(axis_names, str) else tuple(axis_names)
+    idx = jax.lax.axis_index(axes[0])
+    for a in axes[1:]:
+        idx = idx * axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+import repro.core.strategies as _strategies
+
+
+@dataclasses.dataclass(frozen=True)
+class ByzantineGradients(_strategies.Strategy):
+    """Wrap any Strategy; designated workers ship corrupted gradients.
+
+    The corruption runs *inside* the shard_map body before the inner
+    strategy's collective, so a robust aggregator downstream sees
+    exactly what a poisoned serverless worker would have pushed to the
+    channel.  ``mode``: ``scale`` (g *= scale), ``sign_flip`` (-g) or
+    ``zero`` (dropped contribution).
+    """
+    name: str = "byzantine"
+    inner: Optional[_strategies.Strategy] = None
+    workers: Tuple[int, ...] = (0,)
+    mode: str = "scale"
+    scale: float = -10.0
+
+    def __post_init__(self):
+        if self.inner is None:
+            raise ValueError("ByzantineGradients needs an inner strategy")
+        # the wrapper rides the inner strategy's accumulation schedule
+        # (SPIRT etc.); a conflicting explicit value would silently
+        # change training semantics, so reject it
+        if self.microbatches not in (1, self.inner.microbatches):
+            raise ValueError(
+                f"microbatches={self.microbatches} conflicts with "
+                f"inner.microbatches={self.inner.microbatches}; set it on "
+                "the inner strategy instead")
+        object.__setattr__(self, "microbatches", self.inner.microbatches)
+
+    def init_state(self, grads_like):
+        return self.inner.init_state(grads_like)
+
+    def sync(self, grads, state, axis_names):
+        import jax
+        import jax.numpy as jnp
+        idx = _linear_axis_index(axis_names)
+        bad = jnp.zeros((), bool)
+        for w in self.workers:
+            bad = jnp.logical_or(bad, idx == w)
+
+        def corrupt(g):
+            if self.mode == "scale":
+                evil = g * jnp.asarray(self.scale, g.dtype)
+            elif self.mode == "sign_flip":
+                evil = -g
+            elif self.mode == "zero":
+                evil = jnp.zeros_like(g)
+            else:
+                raise ValueError(self.mode)
+            return jnp.where(bad, evil, g)
+
+        return self.inner.sync(jax.tree.map(corrupt, grads), state,
+                               axis_names)
+
+    def comm_bytes(self, grads_like, n_workers):
+        return self.inner.comm_bytes(grads_like, n_workers)

@@ -1,0 +1,138 @@
+"""Recovery semantics for the serverless event runtime + robust
+aggregation strategies for real JAX training.
+
+Two recovery policies for a crashed worker, matching the designs the
+paper compares:
+
+  CheckpointRestore  the λML / MLLess model: the supervisor detects the
+                     dead invocation after ``detection_s``, re-invokes
+                     it (cold start + state load) and the worker
+                     *replays* every round since its last checkpoint
+                     (checkpoints every ``checkpoint_every`` rounds).
+                     All surviving workers stall at the barrier until
+                     the replay catches up — the stall is the measured
+                     time-to-recover.
+
+  PeerTakeover       SPIRT (arXiv 2309.14148): per-worker state lives in
+                     the database, so nothing replays.  After
+                     ``detection_s`` the survivors fetch the dead
+                     worker's in-DB partition (one model-sized
+                     transfer) and absorb its remaining minibatches;
+                     the fleet continues with W-1 workers.
+
+Robust aggregators — SPIRT's defense against poisoned gradients — are
+ordinary :class:`~repro.core.strategies.Strategy` objects: every worker
+all-gathers the fleet's gradients and reduces with a byzantine-robust
+statistic instead of the mean.  They compose with
+``faults.ByzantineGradients`` (corrupt-then-aggregate) and with SPIRT's
+microbatch accumulation (``microbatches=K``), and are reachable through
+``repro.core.get_strategy("trimmed_mean" | "coordinate_median")``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.strategies import Strategy, _leaf_bytes
+
+
+# ---------------------------------------------------------------------------
+# Recovery policies (consumed by runtime.EventRuntime)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RecoveryPolicy:
+    detection_s: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointRestore(RecoveryPolicy):
+    """Re-invoke the crashed worker; replay since the last checkpoint."""
+    checkpoint_every: int = 4          # rounds between checkpoints
+
+    def replay_rounds(self, crashed_round: int) -> int:
+        return crashed_round % self.checkpoint_every
+
+
+@dataclasses.dataclass(frozen=True)
+class PeerTakeover(RecoveryPolicy):
+    """SPIRT-style: survivors absorb the dead worker's partition."""
+    detection_s: float = 0.5
+
+
+@dataclasses.dataclass
+class RecoveryEvent:
+    worker: int
+    crash_time_s: float
+    rejoined_time_s: float
+    mode: str                          # "restore" | "takeover"
+
+    @property
+    def time_to_recover_s(self) -> float:
+        return self.rejoined_time_s - self.crash_time_s
+
+
+# ---------------------------------------------------------------------------
+# Robust reduction statistics (pure functions, unit-testable on CPU)
+# ---------------------------------------------------------------------------
+def trimmed_mean(stacked, trim: int):
+    """Mean over axis 0 after dropping the ``trim`` smallest and largest
+    values per coordinate.  ``stacked``: [W, ...]; needs W > 2*trim."""
+    W = stacked.shape[0]
+    if W <= 2 * trim:
+        raise ValueError(f"trimmed_mean needs W > 2*trim, got W={W}, "
+                         f"trim={trim}")
+    s = jnp.sort(stacked, axis=0)
+    return jnp.mean(jax.lax.slice_in_dim(s, trim, W - trim, axis=0), axis=0)
+
+
+def coordinate_median(stacked):
+    """Per-coordinate median over axis 0 of a [W, ...] stack."""
+    return jnp.median(stacked, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Robust aggregation strategies
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class _RobustAggregate(Strategy):
+    """all-gather + robust reduce.  Wire volume matches ParameterServer
+    (every worker sees every gradient) — robustness is bought with the
+    same W x byte blowup the paper charges the λML master with."""
+    name: str = "robust"
+
+    def _reduce(self, stacked):
+        raise NotImplementedError
+
+    def sync(self, grads, state, axis_names):
+        def one(g):
+            stacked = jax.lax.all_gather(g.astype(jnp.float32),
+                                         axis_name=axis_names, axis=0,
+                                         tiled=False)
+            return self._reduce(stacked).astype(g.dtype)
+        return jax.tree.map(one, grads), state, {}
+
+    def comm_bytes(self, grads_like, n_workers):
+        return int(_leaf_bytes(grads_like) * n_workers)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrimmedMean(_RobustAggregate):
+    """Tolerates up to ``trim`` byzantine workers per coordinate side."""
+    name: str = "trimmed_mean"
+    trim: int = 1
+
+    def _reduce(self, stacked):
+        return trimmed_mean(stacked, self.trim)
+
+
+@dataclasses.dataclass(frozen=True)
+class CoordinateMedian(_RobustAggregate):
+    """Tolerates a byzantine minority (< W/2) per coordinate."""
+    name: str = "coordinate_median"
+
+    def _reduce(self, stacked):
+        return coordinate_median(stacked)

@@ -21,6 +21,12 @@ The simulator is deliberately *analytic + compositional* — every number
 in the paper's Table 2 decomposes into these terms, and
 ``benchmarks/table2_cost.py`` validates the decomposition against the
 paper's reported values.
+
+The per-round decomposition lives in :class:`RoundPlan` /
+:func:`round_plan`, which the discrete-event engine
+(``repro.serverless.runtime``) replays event by event: ``simulate_epoch``
+is the engine's closed-form fault-free fast path, and faults, recovery,
+and elasticity live in the engine on top of the same timing terms.
 """
 from __future__ import annotations
 
@@ -85,21 +91,56 @@ def _grad_bytes(n_params: int, dtype_bytes: int = 4) -> float:
     return n_params * dtype_bytes
 
 
-def simulate_epoch(arch: str, *, n_params: int,
-                   compute_s_per_batch: float,
-                   setup: ServerlessSetup = ServerlessSetup(),
-                   significant_fraction: float = 0.3,
-                   accumulation: int = 24) -> EpochReport:
-    """Simulate one training epoch under the given architecture."""
+ARCHS = ("spirt", "mlless", "scatterreduce", "allreduce", "gpu")
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundPlan:
+    """Per-sync-round stage durations for one architecture.
+
+    A *round* is the unit between two cross-worker synchronization
+    barriers: fetch (state load) -> compute ``batches_per_round``
+    minibatches -> sync -> update.  The analytic :func:`simulate_epoch`
+    sums these terms in closed form; the discrete-event engine
+    (``repro.serverless.runtime``) replays them event by event, so the
+    two agree exactly in the fault-free case by construction.
+    """
+    arch: str
+    n_workers: int
+    n_rounds: int
+    batches_per_round: float      # per worker per round
+    fetch_s: float                # state (re)load at the top of a round
+    fetch_first_round_only: bool  # stateful archs load once (gpu)
+    compute_s_per_batch: float
+    sync_s: float                 # per-worker sync work per round
+    update_s: float
+    cold_start_s: float
+    model_bytes: float
+    ram_gb: float
+
+    @property
+    def total_batches(self) -> float:
+        """Epoch work for ONE worker (the pool is W times this)."""
+        return self.n_rounds * self.batches_per_round
+
+
+def round_plan(arch: str, *, n_params: int, compute_s_per_batch: float,
+               setup: ServerlessSetup = ServerlessSetup(),
+               significant_fraction: float = 0.3,
+               accumulation: int = 24) -> RoundPlan:
+    """Decompose an architecture's epoch into per-round stage times."""
     W = setup.n_workers
     ch = setup.channel
     G = _grad_bytes(n_params)
-    stages = StageBreakdown()
     nb = setup.batches_per_worker
 
     # every invocation reloads model + its minibatch (statelessness)
     per_invocation_load = ch.transfer(setup.model_bytes
                                       + setup.minibatch_bytes, ops=2)
+    kw = dict(arch=arch, n_workers=W, cold_start_s=setup.cold_start_s,
+              compute_s_per_batch=compute_s_per_batch,
+              model_bytes=setup.model_bytes, ram_gb=setup.ram_gb,
+              fetch_s=per_invocation_load, fetch_first_round_only=False)
 
     if arch == "spirt":
         # one long-lived invocation per epoch computes `accumulation`
@@ -107,39 +148,35 @@ def simulate_epoch(arch: str, *, n_params: int,
         # ops): per-minibatch store + one in-db average; a single
         # cross-worker sync per accumulation round.
         invocations = max(1, nb // accumulation)
-        stages.fetch = invocations * per_invocation_load
-        stages.compute = nb * compute_s_per_batch
-        indb_store = nb * ch.transfer(G, ops=1)
-        cross = invocations * ((W - 1) * ch.transfer(G, ops=2)
-                               + 2 * ch.latency_s * W)  # sync queue polls
-        stages.sync = indb_store + cross
-        stages.update = invocations * ch.transfer(0, ops=1)  # in-db update
-    elif arch == "mlless":
+        bpr = nb / invocations
+        cross = (W - 1) * ch.transfer(G, ops=2) \
+            + 2 * ch.latency_s * W              # sync queue polls
+        return RoundPlan(n_rounds=invocations, batches_per_round=bpr,
+                         sync_s=bpr * ch.transfer(G, ops=1) + cross,
+                         update_s=ch.transfer(0, ops=1),  # in-db update
+                         **kw)
+    if arch == "mlless":
         # per-minibatch invocations; only significant updates pushed;
         # supervisor round-trip gates every sync step
-        stages.fetch = nb * per_invocation_load
-        stages.compute = nb * compute_s_per_batch
         pushed = significant_fraction * G
         per_sync = (ch.transfer(pushed, ops=1)
                     + (W - 1) * ch.transfer(pushed, ops=1)
                     + 4 * ch.latency_s          # queue notify + supervisor
                     + 2 * ch.latency_s * W)     # supervisor fan-out
-        stages.sync = nb * per_sync
-        stages.update = nb * ch.transfer(G, ops=1)
-    elif arch == "scatterreduce":
-        stages.fetch = nb * per_invocation_load
-        stages.compute = nb * compute_s_per_batch
+        return RoundPlan(n_rounds=nb, batches_per_round=1.0,
+                         sync_s=per_sync,
+                         update_s=ch.transfer(G, ops=1), **kw)
+    if arch == "scatterreduce":
         # push W-1 chunks, fetch W-1 assigned chunks, push aggregate,
         # fetch W-1 aggregated chunks
         chunk = G / W
         per_sync = (ch.transfer((W - 1) * chunk, ops=W - 1) * 2
                     + ch.transfer(chunk, ops=1)
                     + ch.transfer((W - 1) * chunk, ops=W - 1))
-        stages.sync = nb * per_sync
-        stages.update = nb * ch.transfer(G, ops=1)
-    elif arch == "allreduce":
-        stages.fetch = nb * per_invocation_load
-        stages.compute = nb * compute_s_per_batch
+        return RoundPlan(n_rounds=nb, batches_per_round=1.0,
+                         sync_s=per_sync,
+                         update_s=ch.transfer(G, ops=1), **kw)
+    if arch == "allreduce":
         # everyone pushes G; the designated master then pulls all W
         # gradients SERIALLY, aggregates and pushes the result; every
         # worker blocks on the master (the paper's §4.2 scalability
@@ -147,17 +184,44 @@ def simulate_epoch(arch: str, *, n_params: int,
         master_path = W * ch.transfer(G, ops=1) + ch.transfer(G, ops=1)
         per_sync = (ch.transfer(G, ops=1) + master_path
                     + ch.transfer(G, ops=1))
-        stages.sync = nb * per_sync
-        stages.update = nb * ch.transfer(G, ops=1)
-    elif arch == "gpu":
+        return RoundPlan(n_rounds=nb, batches_per_round=1.0,
+                         sync_s=per_sync,
+                         update_s=ch.transfer(G, ops=1), **kw)
+    if arch == "gpu":
         # stateful: load once; S3 gradient exchange per step
-        stages.fetch = per_invocation_load
-        stages.compute = nb * compute_s_per_batch
         per_sync = S3.transfer(G, ops=1) + (W - 1) * S3.transfer(G, ops=1)
-        stages.sync = nb * per_sync
-        stages.update = 0.0
-    else:
-        raise ValueError(arch)
+        kw["fetch_first_round_only"] = True
+        return RoundPlan(n_rounds=nb, batches_per_round=1.0,
+                         sync_s=per_sync, update_s=0.0, **kw)
+    raise ValueError(arch)
+
+
+def simulate_epoch(arch: str, *, n_params: int,
+                   compute_s_per_batch: float,
+                   setup: ServerlessSetup = ServerlessSetup(),
+                   significant_fraction: float = 0.3,
+                   accumulation: int = 24) -> EpochReport:
+    """Simulate one training epoch under the given architecture.
+
+    Closed-form fast path of the event engine: sums the
+    :class:`RoundPlan` stage terms, assuming homogeneous fault-free
+    workers (every barrier is free).  ``runtime.run_event_epoch``
+    replays the identical plan event by event and reduces to these
+    numbers when no faults are injected.
+    """
+    plan = round_plan(arch, n_params=n_params,
+                      compute_s_per_batch=compute_s_per_batch, setup=setup,
+                      significant_fraction=significant_fraction,
+                      accumulation=accumulation)
+    W = setup.n_workers
+    ch = setup.channel
+    nb = setup.batches_per_worker
+    stages = StageBreakdown()
+    stages.fetch = plan.fetch_s * (1 if plan.fetch_first_round_only
+                                   else plan.n_rounds)
+    stages.compute = plan.total_batches * compute_s_per_batch
+    stages.sync = plan.n_rounds * plan.sync_s
+    stages.update = plan.n_rounds * plan.update_s
 
     per_worker = stages.total + setup.cold_start_s
     per_batch = per_worker / nb

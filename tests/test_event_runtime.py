@@ -1,0 +1,161 @@
+"""Discrete-event runtime: fault injection, recovery, autoscaling.
+
+Covers the behaviours the analytic model cannot express — the point of
+the subsystem: crashes recovered by checkpoint-restore vs SPIRT peer
+takeover, stragglers gating every barrier, cold-start storms, byzantine
+bookkeeping under robust aggregation, reactive elasticity, and
+seed-determinism of the whole pipeline.
+"""
+import dataclasses
+
+import pytest
+
+from repro.serverless import (ByzantineWorker, CheckpointRestore,
+                              ColdStartStorm, FaultPlan, PeerTakeover,
+                              ReactiveAutoscaler, ScheduledScaler,
+                              ServerlessSetup, Straggler, WorkerCrash,
+                              run_event_epoch)
+
+N_PARAMS = int(4.2e6)
+COMP = 0.9
+
+
+def _run(arch="allreduce", **kw):
+    return run_event_epoch(arch, n_params=N_PARAMS,
+                           compute_s_per_batch=COMP,
+                           setup=ServerlessSetup(), **kw)
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    return {arch: _run(arch) for arch in ("spirt", "allreduce")}
+
+
+def _crash_plan(base, worker=1, frac=0.4):
+    return FaultPlan(crashes=(WorkerCrash(worker, frac * base.makespan_s),))
+
+
+def test_crash_checkpoint_restore_stalls_fleet(baseline):
+    base = baseline["allreduce"]
+    rep = _run(faults=_crash_plan(base),
+               recovery=CheckpointRestore(checkpoint_every=4))
+    assert len(rep.recoveries) == 1
+    rec = rep.recoveries[0]
+    assert rec.mode == "restore" and rec.worker == 1
+    # re-invocation pays detection + cold start at minimum
+    assert rec.time_to_recover_s > 1.0 + 2.0
+    assert rep.makespan_s > base.makespan_s
+    # survivors stalled at the barrier while the worker replayed
+    assert rep.stage_totals["wait"] > 0
+    # all the work still got done
+    assert rep.work_done_batches == pytest.approx(base.work_done_batches)
+
+
+def test_crash_peer_takeover_spirt(baseline):
+    base = baseline["spirt"]
+    rep = _run("spirt", faults=_crash_plan(base),
+               recovery=PeerTakeover())
+    assert len(rep.recoveries) == 1
+    assert rep.recoveries[0].mode == "takeover"
+    assert rep.n_workers_end == 3          # fleet continues with W-1
+    # survivors absorb the partition: full epoch work still completes
+    assert rep.work_done_batches == pytest.approx(base.work_done_batches)
+
+
+def test_spirt_takeover_recovers_faster_than_restore(baseline):
+    """The paper's fault-tolerance headline: in-database state makes
+    recovery a detection + state-fetch, not a replay."""
+    t_spirt = _run("spirt", faults=_crash_plan(baseline["spirt"]),
+                   recovery=PeerTakeover()).time_to_recover_s
+    t_ar = _run(faults=_crash_plan(baseline["allreduce"]),
+                recovery=CheckpointRestore()).time_to_recover_s
+    assert 0 < t_spirt < t_ar
+
+
+def test_straggler_gates_every_barrier(baseline):
+    base = baseline["allreduce"]
+    rep = _run(faults=FaultPlan(stragglers=(Straggler(2, slowdown=4.0),)))
+    # synchronous training: the whole epoch slows toward the straggler's
+    # compute, and the three healthy workers burn billed wait time
+    assert rep.makespan_s > base.makespan_s + 0.5 * 3 * COMP \
+        * ServerlessSetup().batches_per_worker
+    assert rep.stage_totals["wait"] > 0
+    assert rep.total_cost > base.total_cost
+
+
+def test_cold_start_storm_delays_and_is_seeded(baseline):
+    base = baseline["allreduce"]
+    plan = FaultPlan(storm=ColdStartStorm(extra_s=8.0, fraction=0.5),
+                     seed=7)
+    rep = _run(faults=plan)
+    # the slowest cold start gates the first barrier
+    assert rep.makespan_s == pytest.approx(base.makespan_s + 8.0, rel=1e-6)
+    assert plan.storm_victims(4) == FaultPlan(
+        storm=ColdStartStorm(fraction=0.5), seed=7).storm_victims(4)
+
+
+def test_byzantine_masked_only_under_robust_aggregation():
+    plan = FaultPlan(byzantine=(ByzantineWorker(0),))
+    plain = _run(faults=plan)
+    robust = _run(faults=plan, robust_trim=1)
+    assert plain.poisoned_updates > 0 and plain.masked_updates == 0
+    assert robust.masked_updates > 0 and robust.poisoned_updates == 0
+    # byzantine workers poison updates, not timing
+    assert plain.makespan_s == pytest.approx(robust.makespan_s)
+
+
+def test_autoscaler_counteracts_straggler(baseline):
+    plan = FaultPlan(stragglers=(Straggler(2, slowdown=4.0),))
+    slow = _run(faults=plan)
+    scaled = _run(faults=plan,
+                  autoscaler=ReactiveAutoscaler(max_workers=8))
+    assert scaled.n_workers_peak > 4
+    assert scaled.makespan_s < slow.makespan_s
+    # fault-free epochs must not trigger spurious scaling
+    quiet = _run(autoscaler=ReactiveAutoscaler(max_workers=8))
+    assert quiet.scale_events == []
+    assert quiet.makespan_s == pytest.approx(
+        baseline["allreduce"].makespan_s)
+
+
+def test_scheduled_scaler_shortens_epoch(baseline):
+    base = baseline["allreduce"]
+    rep = _run(autoscaler=ScheduledScaler(schedule=((2, 4),)))
+    assert rep.n_workers_peak == 8
+    # doubling the fleet after round 2 halves the remaining rounds
+    assert rep.rounds < base.rounds
+    assert rep.makespan_s < base.makespan_s
+
+
+def test_fault_plan_random_is_deterministic():
+    kw = dict(n_workers=8, horizon_s=100.0, crash_rate=0.3,
+              straggler_rate=0.3, byzantine_fraction=0.25, storm_prob=0.5)
+    a = FaultPlan.random(seed=11, **kw)
+    b = FaultPlan.random(seed=11, **kw)
+    c = FaultPlan.random(seed=12, **kw)
+    assert a == b
+    assert a != c
+
+
+def test_event_runs_are_deterministic():
+    plan = FaultPlan.random(seed=5, n_workers=4, horizon_s=80.0,
+                            crash_rate=0.4, straggler_rate=0.4)
+    a = _run(faults=plan, recovery=CheckpointRestore())
+    b = _run(faults=plan, recovery=CheckpointRestore())
+    assert a.makespan_s == b.makespan_s
+    assert a.total_cost == b.total_cost
+    assert a.timeline == b.timeline
+
+
+def test_billing_follows_pricing_model(baseline):
+    """Lambda epochs bill GB-seconds of invocation wall-clock; a crash
+    under takeover stops the dead worker's meter early."""
+    from repro.costmodel import pricing
+    base = baseline["spirt"]
+    setup = ServerlessSetup()
+    expect = 4 * pricing.lambda_cost(base.makespan_s, setup.ram_gb)
+    assert base.total_cost == pytest.approx(expect, rel=1e-9)
+    crashed = _run("spirt", faults=_crash_plan(base),
+                   recovery=PeerTakeover())
+    # dead worker billed < full epoch, survivors billed > fault-free
+    assert crashed.total_cost != pytest.approx(base.total_cost, rel=1e-3)

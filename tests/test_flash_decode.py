@@ -29,7 +29,8 @@ def test_flash_decode_matches_reference(window, pos_past_wrap):
 
     expect = decode_attention(q, k, v, pos, window=window)
 
-    fn = jax.shard_map(
+    from repro.compat import shard_map
+    fn = shard_map(
         lambda q_, k_, v_: flash_decode_attention(
             q_, k_, v_, pos, axis_name="data", total_len=L, window=window),
         mesh=mesh, in_specs=(P(), P(None, "data"), P(None, "data")),

@@ -150,8 +150,9 @@ def test_hlo_collective_parser_counts_scan_trips():
             return jax.lax.psum(c, "data"), None
         y, _ = jax.lax.scan(body, x, None, length=7)
         return y
-    sm = jax.shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P("data"),
-                       check_vma=False, axis_names={"data"})
+    from repro.compat import shard_map
+    sm = shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P("data"),
+                   check_vma=False, axis_names={"data"})
     hlo = jax.jit(sm).lower(
         jnp.ones((2, 64), jnp.float32)).compile().as_text()
     stats = analyze_collectives(hlo)

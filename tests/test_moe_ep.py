@@ -25,11 +25,12 @@ def test_moe_ep_matches_local_dispatch():
     B, S = 8, 16
     x = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
 
-    local = jax.shard_map(
+    from repro.compat import shard_map
+    local = shard_map(
         lambda p_, x_: moe.moe_apply(p_, x_, cfg)[0],
         mesh=mesh, in_specs=(P(), P("data")), out_specs=P("data"),
         check_vma=False, axis_names={"data"})
-    ep = jax.shard_map(
+    ep = shard_map(
         lambda p_, x_: moe.moe_apply_ep(p_, x_, cfg, axis_name="data")[0],
         mesh=mesh, in_specs=(P(), P("data")), out_specs=P("data"),
         check_vma=False, axis_names={"data"})

@@ -1,5 +1,7 @@
 """Property-based tests (hypothesis) on system invariants."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,80 @@
+"""Analytic-simulator invariants + event-runtime agreement.
+
+The closed-form ``simulate_epoch`` is the paper's Table 2 engine; these
+tests pin its orderings (ISSUE 1 satellite): SPIRT's amortized sync
+beats AllReduce's master bottleneck, AllReduce total sync grows
+superlinearly with fleet size, the cost arithmetic matches the paper's
+reported Table 2 numbers, and the discrete-event runtime reduces to the
+analytic numbers when no faults are injected.
+"""
+import pytest
+
+from repro.serverless import (PAPER_TABLE2, ServerlessSetup, run_event_epoch,
+                              simulate_epoch)
+from repro.serverless.simulator import ARCHS, paper_cost_check
+
+N_PARAMS = int(4.2e6)
+COMP = 0.9
+
+
+def _epoch(arch, n_workers=4):
+    return simulate_epoch(arch, n_params=N_PARAMS,
+                          compute_s_per_batch=COMP,
+                          setup=ServerlessSetup(n_workers=n_workers))
+
+
+def test_spirt_sync_beats_allreduce():
+    """Amortized P2P sync < master-bottleneck sync at equal params/W."""
+    assert _epoch("spirt").stages.sync < _epoch("allreduce").stages.sync
+
+
+def test_allreduce_sync_superlinear_in_workers():
+    """Total (fleet-wide) AllReduce sync grows faster than linearly in W
+    — the serial master path is the paper's §4.2 scalability wall."""
+    total = {W: W * _epoch("allreduce", n_workers=W).stages.sync
+             for W in (4, 8, 16)}
+    assert total[8] > 2.0 * total[4]
+    assert total[16] > 2.0 * total[8]
+
+
+def test_spirt_comm_cheaper_than_mlless_per_epoch():
+    """Single sync per accumulation round < per-minibatch supervised
+    sync (Table 2's MLLess blow-up)."""
+    assert _epoch("spirt").per_worker_s < _epoch("mlless").per_worker_s
+
+
+@pytest.mark.parametrize("model", ["mobilenet", "resnet18"])
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_paper_cost_check_within_15pct(model, arch):
+    r = paper_cost_check(model, arch)
+    rel = abs(r["our_total"] - r["paper_total"]) / r["paper_total"]
+    assert rel < 0.15, (model, arch, r)
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_event_runtime_matches_analytic_fault_free(arch):
+    """The event engine's fault-free makespan/cost ARE the analytic
+    numbers (simulate_epoch is its validated fast path)."""
+    ana = _epoch(arch)
+    rep = run_event_epoch(arch, n_params=N_PARAMS,
+                          compute_s_per_batch=COMP,
+                          setup=ServerlessSetup())
+    assert rep.makespan_s == pytest.approx(ana.per_worker_s, rel=1e-9)
+    assert rep.total_cost == pytest.approx(ana.total_cost, rel=1e-9)
+    assert rep.recoveries == []
+    assert rep.work_done_batches == pytest.approx(
+        ServerlessSetup().n_workers * ServerlessSetup().batches_per_worker)
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_event_runtime_stage_totals_match_analytic(arch):
+    """Per-stage busy time (summed over W workers) = W x analytic."""
+    W = 4
+    ana = _epoch(arch)
+    rep = run_event_epoch(arch, n_params=N_PARAMS,
+                          compute_s_per_batch=COMP,
+                          setup=ServerlessSetup())
+    for stage in ("fetch", "compute", "sync", "update"):
+        assert rep.stage_totals[stage] == pytest.approx(
+            W * getattr(ana.stages, stage), rel=1e-9, abs=1e-12), stage
+    assert rep.stage_totals["wait"] == pytest.approx(0.0, abs=1e-9)

@@ -1,8 +1,10 @@
 """Property tests for the divisibility-aware sharder."""
+import pytest
+
+pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from jax.sharding import PartitionSpec as P
 
