@@ -32,16 +32,11 @@ from repro.serverless import (CheckpointRestore, ColdStartStorm, FaultPlan,
                               ServerlessSetup, Straggler, WorkerCrash,
                               ByzantineWorker, run_event_epoch,
                               simulate_epoch)
-from repro.serverless.simulator import ARCHS, PAPER_TABLE2
+from repro.serverless.simulator import (ARCHS,
+                                        paper_compute_anchor
+                                        as _compute_anchor)
 
 N_PARAMS = int(4.2e6)            # MobileNet
-
-
-def _compute_anchor(arch: str) -> float:
-    """Compute share of the paper's measured MobileNet per-batch time
-    (same anchoring as benchmarks/table2_cost.py layer 3)."""
-    return PAPER_TABLE2["mobilenet"][arch][0] * (0.9 if arch == "gpu"
-                                                 else 0.85)
 
 
 def _epoch(arch, **kw):

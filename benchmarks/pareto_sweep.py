@@ -1,0 +1,235 @@
+"""Cost-vs-makespan Pareto fronts + sweep-engine throughput.
+
+Three sections, all recorded in ``BENCH_sweep.json`` so the repo's perf
+trajectory is tracked run over run:
+
+  1. *Analytic throughput* — the vectorized grid
+     (``repro.serverless.sweep.sweep_analytic``) vs an equivalent loop
+     of scalar ``simulate_epoch`` calls on a >=1,000-point grid
+     (arch x n_workers x RAM tier x channel x accumulation x
+     significant_fraction), with a spot exactness re-check.
+  2. *Event-engine speedup* — the optimized ``EventRuntime`` vs the
+     frozen PR 1 reference (``runtime_ref``) on a fault-injected epoch
+     (crash + straggler, checkpoint-restore), asserting identical
+     reports while timing.
+  3. *Pareto fronts* — for every architecture, the ROADMAP's elastic
+     pricing sweep: ReactiveAutoscaler bounds x Lambda RAM tiers x
+     channel (Redis/S3) under seeded random faults, multi-replicate
+     mean cost vs mean makespan, reduced to the non-dominated front.
+
+Rows: sweep/<section>/<name>,value,notes
+Usage:
+    PYTHONPATH=src python -m benchmarks.pareto_sweep [--quick]
+        [--json BENCH_sweep.json] [--processes N]
+    PYTHONPATH=src python -m benchmarks.run --only sweep
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.serverless import (FaultPlan, CheckpointRestore, ServerlessSetup,
+                              Straggler, WorkerCrash)
+from repro.serverless import runtime as runtime_opt
+from repro.serverless import runtime_ref
+from repro.serverless.simulator import (ARCHS, REDIS, S3,
+                                        paper_compute_anchor
+                                        as _compute_anchor)
+from repro.serverless.sweep import (EventSweepPoint, FaultRates, SweepGrid,
+                                    pareto_front, ram_scaled_compute,
+                                    scalar_sweep, sweep_analytic,
+                                    sweep_events)
+
+N_PARAMS = int(4.2e6)            # MobileNet
+
+
+def _analytic_grid(quick: bool) -> SweepGrid:
+    if quick:
+        return SweepGrid(
+            n_params=N_PARAMS, compute_s_per_batch=ram_scaled_compute(0.9),
+            n_workers=(2, 4, 8, 16), ram_gb=(1.0, 2.0, 3.0, 4.0),
+            channels=(REDIS, S3), accumulation=(8, 24),
+            significant_fraction=(0.1, 0.3, 0.5, 0.9))        # 1280 points
+    return SweepGrid(
+        n_params=N_PARAMS, compute_s_per_batch=ram_scaled_compute(0.9),
+        n_workers=(2, 4, 8, 16), ram_gb=(1.0, 2.0, 3.0, 4.0, 6.0),
+        channels=(REDIS, S3), accumulation=(8, 24),
+        significant_fraction=(0.05, 0.1, 0.3, 0.5, 0.9))      # 2000 points
+
+
+def bench_analytic(csv_rows, quick: bool) -> dict:
+    grid = _analytic_grid(quick)
+    sweep_analytic(grid)                         # warm numpy / imports
+    t_vec = min(_timed(lambda: sweep_analytic(grid)) for _ in range(3))
+    t_sca, reports = _timed_r(lambda: scalar_sweep(grid))
+    vec = sweep_analytic(grid)
+    # spot exactness re-check (the full property test lives in
+    # tests/test_sweep.py)
+    step = max(1, len(reports) // 97)
+    for i in range(0, len(reports), step):
+        assert vec.per_worker_s[i] == reports[i].per_worker_s, i
+        assert vec.total_cost[i] == reports[i].total_cost, i
+    speedup = t_sca / t_vec
+    sims_per_s = grid.n_points / t_vec
+    csv_rows.append(("sweep/analytic/points", grid.n_points, "grid size"))
+    csv_rows.append(("sweep/analytic/vectorized_s", t_vec,
+                     f"scalar={t_sca:.3f}s"))
+    csv_rows.append(("sweep/analytic/speedup_x", speedup,
+                     "vectorized vs scalar simulate_epoch loop"))
+    csv_rows.append(("sweep/analytic/sims_per_s", sims_per_s, "vectorized"))
+    return dict(points=grid.n_points, vectorized_s=t_vec, scalar_s=t_sca,
+                speedup=speedup, sims_per_s=sims_per_s)
+
+
+def bench_event_engine(csv_rows, quick: bool) -> dict:
+    """Optimized vs reference engine on a fault-injected epoch."""
+    arch = "allreduce"
+    comp = _compute_anchor(arch)
+    base = runtime_ref.run_event_epoch(arch, n_params=N_PARAMS,
+                                       compute_s_per_batch=comp,
+                                       setup=ServerlessSetup())
+    kw = dict(n_params=N_PARAMS, compute_s_per_batch=comp,
+              setup=ServerlessSetup(),
+              faults=FaultPlan(
+                  crashes=(WorkerCrash(1, 0.4 * base.makespan_s),),
+                  stragglers=(Straggler(2, slowdown=4.0),)),
+              recovery=CheckpointRestore(checkpoint_every=4))
+    a = runtime_opt.run_event_epoch(arch, **kw)
+    b = runtime_ref.run_event_epoch(arch, **kw)
+    assert a.makespan_s == b.makespan_s, (a.makespan_s, b.makespan_s)
+    assert a.total_cost == b.total_cost
+    assert a.stage_totals == b.stage_totals
+
+    n = 100 if quick else 300
+    t_ref = min(_timed(lambda: [runtime_ref.run_event_epoch(arch, **kw)
+                                for _ in range(n)]) for _ in range(3)) / n
+    t_opt = min(_timed(lambda: [runtime_opt.run_event_epoch(arch, **kw)
+                                for _ in range(n)]) for _ in range(3)) / n
+    speedup = t_ref / t_opt
+    csv_rows.append(("sweep/event_engine/ref_s_per_epoch", t_ref,
+                     "PR1 closure-per-event engine"))
+    csv_rows.append(("sweep/event_engine/opt_s_per_epoch", t_opt,
+                     "slots + opcodes + lazy heap"))
+    csv_rows.append(("sweep/event_engine/speedup_x", speedup,
+                     f"fault-injected {arch} epoch (crash+straggler)"))
+    csv_rows.append(("sweep/event_engine/epochs_per_s", 1.0 / t_opt,
+                     "optimized"))
+    return dict(scenario=f"{arch} crash+straggler restore",
+                ref_s_per_epoch=t_ref, opt_s_per_epoch=t_opt,
+                speedup=speedup, epochs_per_s=1.0 / t_opt)
+
+
+def _pareto_points(quick: bool):
+    """The ROADMAP's elastic pricing sweep: autoscaler bounds x RAM
+    tiers x channel, per architecture."""
+    rams = (1.0, 2.0, 3.0) if quick else (1.0, 2.0, 3.0, 4.0)
+    scalers = ((0, 0), (1, 8), (2, 16))          # (min, max); 0,0 = fixed
+    points = []
+    for arch in ARCHS:
+        model = ram_scaled_compute(_compute_anchor(arch))
+        for ram in rams:
+            for ch in (REDIS, S3):
+                for lo, hi in scalers:
+                    points.append(EventSweepPoint(
+                        arch=arch, n_params=N_PARAMS,
+                        compute_s_per_batch=model(arch, ram),
+                        setup=ServerlessSetup(ram_gb=ram, channel=ch),
+                        autoscale_min=max(lo, 1), autoscale_max=hi,
+                        label=f"ram{ram:g}/{ch.name}/as{lo}-{hi}"))
+    return points
+
+
+def bench_pareto(csv_rows, quick: bool, processes) -> dict:
+    points = _pareto_points(quick)
+    rates = FaultRates(crash_rate=0.2, straggler_rate=0.3, storm_prob=0.2)
+    reps = 3 if quick else 8
+    t0 = time.perf_counter()
+    stats = sweep_events(points, rates=rates, n_replicates=reps, seed=42,
+                         processes=processes)
+    elapsed = time.perf_counter() - t0
+    n_sims = len(points) * reps
+    csv_rows.append(("sweep/event_sweep/points", len(points),
+                     f"replicates={reps}"))
+    csv_rows.append(("sweep/event_sweep/sims_per_s", n_sims / elapsed,
+                     f"{n_sims} fault-injected epochs in {elapsed:.2f}s"))
+
+    fronts = {}
+    for arch in ARCHS:
+        rows = [s for s in stats if s.point.arch == arch]
+        costs = [s.cost_mean for s in rows]
+        makespans = [s.makespan_mean_s for s in rows]
+        front = set(pareto_front(costs, makespans).tolist())
+        fronts[arch] = [
+            dict(label=s.point.label, ram_gb=s.point.setup.ram_gb,
+                 channel=s.point.setup.channel.name,
+                 autoscale_max=s.point.autoscale_max,
+                 cost_mean=s.cost_mean, makespan_mean_s=s.makespan_mean_s,
+                 makespan_p95_s=s.makespan_p95_s, ttr_p95_s=s.ttr_p95_s,
+                 cost_overhead_mean=s.cost_overhead_mean,
+                 on_front=i in front)
+            for i, s in enumerate(rows)]
+        fp = sorted((r for r in fronts[arch] if r["on_front"]),
+                    key=lambda r: r["cost_mean"])
+        # a front is non-dominated by construction: cost strictly up,
+        # makespan strictly down
+        for a, b in zip(fp, fp[1:]):
+            assert b["cost_mean"] >= a["cost_mean"]
+            assert b["makespan_mean_s"] < a["makespan_mean_s"]
+        csv_rows.append((f"sweep/pareto/{arch}/front_size", len(fp),
+                         f"of {len(rows)} swept configs"))
+        for r in fp:
+            csv_rows.append((
+                f"sweep/pareto/{arch}/{r['label']}/cost", r["cost_mean"],
+                f"makespan={r['makespan_mean_s']:.1f}s "
+                f"p95={r['makespan_p95_s']:.1f}s"))
+    return dict(points=len(points), replicates=reps, elapsed_s=elapsed,
+                sims_per_s=n_sims / elapsed, fronts=fronts)
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _timed_r(fn):
+    t0 = time.perf_counter()
+    r = fn()
+    return time.perf_counter() - t0, r
+
+
+def run(csv_rows, *, quick: bool = False, processes=None,
+        json_path: str = "BENCH_sweep.json"):
+    payload = {
+        "benchmark": "pareto_sweep",
+        "quick": quick,
+        "analytic": bench_analytic(csv_rows, quick),
+        "event_engine": bench_event_engine(csv_rows, quick),
+        "event_sweep": bench_pareto(csv_rows, quick, processes),
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        csv_rows.append(("sweep/_json", 1, json_path))
+    return csv_rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller grid / fewer replicates (CI)")
+    ap.add_argument("--json", default="BENCH_sweep.json")
+    ap.add_argument("--processes", type=int, default=None,
+                    help="0/1 inline; default cpu count (<=8)")
+    args = ap.parse_args()
+    rows = []
+    run(rows, quick=args.quick, processes=args.processes,
+        json_path=args.json)
+    print("name,value,derived")
+    for name, value, notes in rows:
+        print(f"{name},{value},{str(notes).replace(',', ';')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,8 +15,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (fault_tolerance, fig23_comm, roofline_report,
-                            strategy_matrix, table2_cost, table3_convergence)
+    from benchmarks import (fault_tolerance, fig23_comm, pareto_sweep,
+                            roofline_report, strategy_matrix, table2_cost,
+                            table3_convergence)
     suites = {
         "table2": table2_cost.run,
         "fig23": fig23_comm.run,
@@ -24,6 +25,7 @@ def main() -> None:
         "roofline": roofline_report.run,
         "strategy_matrix": strategy_matrix.run,
         "fault_tolerance": fault_tolerance.run,
+        "sweep": pareto_sweep.run,
     }
     if args.only:
         suites = {args.only: suites[args.only]}

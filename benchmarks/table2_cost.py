@@ -93,8 +93,8 @@ def run(csv_rows):
             setup = ServerlessSetup(ram_gb=(ram or 2048) / 1024.0)
             # compute share of each framework's own measured per-batch
             # time (the remainder is the sync/orchestration we model)
-            comp = PAPER_TABLE2[model_name][arch][0] * \
-                (0.9 if arch == "gpu" else 0.85)
+            from repro.serverless.simulator import paper_compute_anchor
+            comp = paper_compute_anchor(arch, model_name)
             rep = simulate_epoch(ARCH_MAP[arch], n_params=int(
                 n_params[model_name]), compute_s_per_batch=comp,
                 setup=setup)

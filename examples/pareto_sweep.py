@@ -1,0 +1,85 @@
+"""Walkthrough: cost-vs-makespan Pareto fronts from the sweep engine.
+
+Three steps, mirroring the subsystem's layers (ISSUE 2 tentpole):
+
+  1. vectorized analytic sweep over a full configuration grid
+     (arch x workers x RAM tier x channel x accumulation x fraction);
+  2. seeded multi-replicate event-engine sweep of the interesting
+     configs under random faults (crash / straggler / storm);
+  3. Pareto extraction: which (RAM tier, channel, autoscaler bound)
+     combos are worth paying for, per architecture.
+
+  PYTHONPATH=src python examples/pareto_sweep.py
+"""
+import time
+
+from repro.serverless import (EventSweepPoint, FaultRates, ServerlessSetup,
+                              SweepGrid, pareto_front, ram_scaled_compute,
+                              sweep_analytic, sweep_events)
+from repro.serverless.simulator import (ARCHS, REDIS, S3,
+                                        paper_compute_anchor as anchor)
+
+
+def main():
+    # ---- 1. analytic grid: millions of configs per second -------------
+    grid = SweepGrid(n_params=4_200_000,
+                     compute_s_per_batch=ram_scaled_compute(0.9),
+                     n_workers=(2, 4, 8, 16),
+                     ram_gb=(1.0, 2.0, 3.0, 4.0),
+                     channels=(REDIS, S3),
+                     accumulation=(8, 24),
+                     significant_fraction=(0.1, 0.3, 0.9))
+    t0 = time.perf_counter()
+    sweep = sweep_analytic(grid)
+    dt = time.perf_counter() - t0
+    print(f"analytic grid: {grid.n_points} configs in {dt*1e3:.1f} ms "
+          f"({grid.n_points/dt:,.0f} sims/s)\n")
+
+    # cheapest config per architecture, from the closed form
+    print(f"{'arch':14s} {'cheapest $':>10s} {'makespan s':>10s}  config")
+    for arch in ARCHS:
+        m = sweep.mask(arch)
+        i = int(sweep.total_cost[m].argmin())
+        idx = m.nonzero()[0][i]
+        p = sweep.point(idx)
+        print(f"{arch:14s} {p['total_cost']:10.4f} "
+              f"{p['per_worker_s']:10.1f}  W={p['n_workers']} "
+              f"ram={p['ram_gb']:g}GB {p['channel'].name}")
+
+    # ---- 2. + 3. fault-injected event sweep -> Pareto fronts ----------
+    rates = FaultRates(crash_rate=0.2, straggler_rate=0.3, storm_prob=0.2)
+    print("\nPareto fronts under faults "
+          f"(crash={rates.crash_rate} straggler={rates.straggler_rate} "
+          f"storm={rates.storm_prob}, 4 replicates):")
+    for arch in ARCHS:
+        model = ram_scaled_compute(anchor(arch))
+        points = [EventSweepPoint(
+            arch=arch, n_params=4_200_000,
+            compute_s_per_batch=model(arch, ram),
+            setup=ServerlessSetup(ram_gb=ram, channel=ch),
+            autoscale_max=hi,
+            label=f"ram{ram:g}GB/{ch.name}"
+                  + (f"/scale<= {hi}" if hi else "/fixed"))
+            for ram in (1.0, 2.0, 3.0)
+            for ch in (REDIS, S3)
+            for hi in (0, 8)]
+        stats = sweep_events(points, rates=rates, n_replicates=4, seed=42)
+        costs = [s.cost_mean for s in stats]
+        times = [s.makespan_mean_s for s in stats]
+        front = pareto_front(costs, times)
+        print(f"\n  {arch} — {len(front)} of {len(points)} configs "
+              "on the front (cost up, makespan down):")
+        for i in front:
+            s = stats[i]
+            print(f"    ${s.cost_mean:.4f}  {s.makespan_mean_s:7.1f}s "
+                  f"(p95 {s.makespan_p95_s:7.1f}s, "
+                  f"ttr p95 {s.ttr_p95_s:5.1f}s)  {s.point.label}")
+    print("\nReading the fronts: SPIRT/ScatterReduce buy makespan with "
+          "RAM tiers\n(Lambda vCPU scales with memory); the GPU baseline "
+          "is fast but its\nhourly billing cannot scale to zero between "
+          "rounds — the paper's\ncost-performance crossover, now as a "
+          "surface instead of a point.")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,7 @@ architecture, plus cost, from the simulator.
   PYTHONPATH=src python examples/serverless_stage_breakdown.py
 """
 from repro.serverless import ServerlessSetup, simulate_epoch
-from repro.serverless.simulator import PAPER_TABLE2
+from repro.serverless.simulator import PAPER_TABLE2, paper_compute_anchor
 
 
 def main():
@@ -14,9 +14,9 @@ def main():
     print(f"{'framework':15s} {'fetch':>7s} {'compute':>8s} {'sync':>7s} "
           f"{'update':>7s} {'total s':>8s} {'$/epoch':>8s}")
     for arch in ("spirt", "mlless", "scatterreduce", "allreduce", "gpu"):
-        per_batch, ram, _, paper_total = PAPER_TABLE2["mobilenet"][arch]
+        _, ram, _, paper_total = PAPER_TABLE2["mobilenet"][arch]
         setup = ServerlessSetup(ram_gb=(ram or 2048) / 1024.0)
-        comp = per_batch * (0.9 if arch == "gpu" else 0.85)
+        comp = paper_compute_anchor(arch)
         rep = simulate_epoch(arch, n_params=4_200_000,
                              compute_s_per_batch=comp, setup=setup)
         s = rep.stages

@@ -12,7 +12,13 @@ from repro.serverless.faults import (  # noqa: F401
 from repro.serverless.recovery import (  # noqa: F401
     CheckpointRestore, CoordinateMedian, PeerTakeover, RecoveryEvent,
     RecoveryPolicy, TrimmedMean, coordinate_median, trimmed_mean,
+    trimmed_mean_sort,
 )
 from repro.serverless.autoscale import (  # noqa: F401
     ReactiveAutoscaler, ScheduledScaler,
+)
+from repro.serverless.sweep import (  # noqa: F401
+    AnalyticSweep, EventPointStats, EventSweepPoint, FaultRates, SweepGrid,
+    iter_grid, pareto_front, ram_scaled_compute, scalar_sweep,
+    sweep_analytic, sweep_events,
 )

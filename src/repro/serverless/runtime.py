@@ -1,9 +1,9 @@
-"""Discrete-event serverless training runtime.
+"""Discrete-event serverless training runtime (optimized hot path).
 
 Event model
 -----------
-A single priority queue of ``(time, seq, callback)`` events drives the
-whole fleet.  Each worker is a lifecycle state machine
+A single priority queue of ``(time, seq, worker, gen, opcode, arg)``
+events drives the whole fleet.  Each worker is a lifecycle state machine
 
     COLD_START -> STATE_LOAD -> COMPUTE -> SYNC -> (barrier) -> UPDATE
          ^                                                        |
@@ -27,6 +27,27 @@ minibatches, so an autoscaler that grows the fleet genuinely shortens
 the epoch (fewer rounds), and peer takeover after a crash genuinely
 lengthens per-worker rounds (survivors absorb the partition).
 
+Hot-path design (ISSUE 2 tentpole) — this engine exists to be swept
+thousands of times per chart by ``repro.serverless.sweep``, so the
+per-event machinery of the reference implementation
+(``runtime_ref.py``, kept frozen for regression) is replaced by:
+
+  * ``__slots__`` workers with plain float stage accumulators instead
+    of a per-worker dict;
+  * integer event opcodes dispatched through a bound-method table —
+    no per-event closure allocation;
+  * timeline logging off by default (``max_timeline=0``); enabling it
+    also disables round batching so the recorded timeline has full
+    per-event granularity;
+  * a lazy heap: when nothing can interleave with the next round (no
+    scheduled crash/respawn/rejoin/spawn at or before the projected
+    barrier release, no restoring worker, no pending scale-in), the
+    whole update -> fetch -> compute -> sync -> barrier sequence for
+    every worker is executed inline with the *same floating-point
+    operation order* as the event path, so ``RuntimeReport`` numbers
+    are byte-identical to the reference engine
+    (``tests/test_event_runtime_opt.py`` asserts this).
+
 Fault taxonomy lives in ``faults.py``; recovery semantics (checkpoint
 replay vs SPIRT in-database peer takeover) in ``recovery.py``; scaling
 policies in ``autoscale.py``.  Billing follows
@@ -38,10 +59,10 @@ GPU baseline bills instance-hours for the makespan.
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import itertools
 import math
-from typing import Callable, Dict, List, Optional, Tuple
+from heapq import heappop, heappush
+from typing import Dict, List, Optional, Tuple
 
 from repro.costmodel import pricing
 from repro.serverless.faults import FaultPlan
@@ -55,28 +76,46 @@ COLD_START, STATE_LOAD, COMPUTE, SYNC, WAIT_BARRIER, UPDATE, DONE, DEAD = (
     "cold_start", "state_load", "compute", "sync", "wait_barrier",
     "update", "done", "dead")
 
+# integer event opcodes; heap entries are (t, seq, wid, gen, op, arg)
+(_OP_COLD_DONE, _OP_LOADED, _OP_ROUND_LOADED, _OP_COMPUTED, _OP_SYNCED,
+ _OP_UPDATED, _OP_RELEASE, _OP_MAYBE_RELEASE, _OP_CRASH,
+ _OP_RESPAWN) = range(10)
 
-@dataclasses.dataclass
+# _fast_round outcomes
+_CLASSIC, _EPOCH_DONE, _NEXT_BARRIER = 0, 1, 2
+
+
 class _Worker:
-    id: int
-    state: str = COLD_START
-    gen: int = 0                 # bumped on crash; stale events ignored
-    alive: bool = True
-    spawn_time: float = 0.0
-    done_time: Optional[float] = None
-    joined: bool = False         # finished cold start + first load
-    work_mult: float = 1.0       # >1 after absorbing a peer's partition
-    replay_rounds: int = 0       # pending checkpoint replay after restore
-    byzantine: bool = False
-    restoring: bool = False      # crashed, checkpoint-restore in flight
-    initial: bool = False        # part of the epoch-start fleet
-    pending_recovery: Optional[RecoveryEvent] = None
-    # per-stage busy-time accounting (excludes barrier waits)
-    stage_s: Dict[str, float] = dataclasses.field(
-        default_factory=lambda: {"cold_start": 0.0, "fetch": 0.0,
-                                 "compute": 0.0, "sync": 0.0,
-                                 "update": 0.0, "wait": 0.0, "replay": 0.0})
-    _stage_started: float = 0.0
+    """Per-worker state; slotted — this is the hot allocation."""
+    __slots__ = ("id", "state", "gen", "alive", "spawn_time", "done_time",
+                 "joined", "work_mult", "replay_rounds", "byzantine",
+                 "restoring", "initial", "pending_recovery",
+                 "s_cold", "s_fetch", "s_compute", "s_sync", "s_update",
+                 "s_wait", "s_replay", "_stage_started")
+
+    def __init__(self, wid: int, byzantine: bool = False):
+        self.id = wid
+        self.state = COLD_START
+        self.gen = 0                 # bumped on crash; stale events ignored
+        self.alive = True
+        self.spawn_time = 0.0
+        self.done_time: Optional[float] = None
+        self.joined = False          # finished cold start + first load
+        self.work_mult = 1.0         # >1 after absorbing a peer's partition
+        self.replay_rounds = 0       # pending checkpoint replay after restore
+        self.byzantine = byzantine
+        self.restoring = False       # crashed, checkpoint-restore in flight
+        self.initial = False         # part of the epoch-start fleet
+        self.pending_recovery: Optional[RecoveryEvent] = None
+        # per-stage busy-time accounting (excludes barrier waits)
+        self.s_cold = 0.0
+        self.s_fetch = 0.0
+        self.s_compute = 0.0
+        self.s_sync = 0.0
+        self.s_update = 0.0
+        self.s_wait = 0.0
+        self.s_replay = 0.0
+        self._stage_started = 0.0
 
 
 @dataclasses.dataclass
@@ -115,7 +154,7 @@ class EventRuntime:
                  faults: Optional[FaultPlan] = None,
                  recovery: Optional[RecoveryPolicy] = None,
                  autoscaler=None, robust_trim: int = 0,
-                 max_timeline: int = 4096):
+                 max_timeline: int = 0):
         self.plan = plan
         self.setup = setup
         self.faults = faults or FaultPlan()
@@ -123,9 +162,10 @@ class EventRuntime:
         self.autoscaler = autoscaler
         self.robust_trim = robust_trim
         self.max_timeline = max_timeline
+        self._tl = max_timeline > 0    # timeline off by default (hot path)
 
         self.t = 0.0
-        self._heap: List[Tuple[float, int, int, int, Callable]] = []
+        self._heap: List[tuple] = []
         self._seq = itertools.count()
         self.workers: List[_Worker] = []
         self.round_idx = 0
@@ -139,31 +179,35 @@ class EventRuntime:
         self.poisoned = 0
         self.masked = 0
         self._pending_scale_in = 0
+        # hot-path indices: per-worker straggler lists (preserving the
+        # FaultPlan tuple order so max-of-overlaps matches bit-for-bit),
+        # byzantine presence, and work_mult uniformity (falsified by
+        # peer takeover, which skews survivor partitions)
+        self._strag_by_worker: Dict[int, list] = {}
+        for s in self.faults.stragglers:
+            self._strag_by_worker.setdefault(s.worker, []).append(s)
+        self._has_byz = bool(self.faults.byzantine)
+        self._uniform = True
 
     # ------------------------------------------------------------ events
-    def _schedule(self, t: float, w: Optional[_Worker], fn: Callable):
-        gen = w.gen if w is not None else -1
-        wid = w.id if w is not None else -1
-        heapq.heappush(self._heap, (t, next(self._seq), wid, gen, fn))
+    def _schedule(self, t: float, w: Optional[_Worker], op: int, arg=None):
+        if w is None:
+            heappush(self._heap, (t, next(self._seq), -1, -1, op, arg))
+        else:
+            heappush(self._heap, (t, next(self._seq), w.id, w.gen, op,
+                                  arg))
 
     def _log(self, w: int, event: str):
         if len(self.timeline) < self.max_timeline:
             self.timeline.append((self.t, w, event))
 
     # ------------------------------------------------------------ stages
-    def _begin_stage(self, w: _Worker, state: str):
-        w.state = state
-        w._stage_started = self.t
-
-    def _end_stage(self, w: _Worker, key: str):
-        w.stage_s[key] += self.t - w._stage_started
-
     def _spawn_worker(self, t: float, *, byzantine: bool = False,
                       replay_rounds: int = 0,
                       existing: Optional[_Worker] = None) -> _Worker:
         """(Re-)invoke a worker: cold start, then first state load."""
         if existing is None:
-            w = _Worker(id=len(self.workers), byzantine=byzantine)
+            w = _Worker(len(self.workers), byzantine)
             self.workers.append(w)
         else:
             w = existing
@@ -173,32 +217,36 @@ class EventRuntime:
         cold = self.plan.cold_start_s
         if w.id in self._storm_victims:
             cold += self.faults.storm.extra_s
-        self._log(w.id, f"invoke(cold={cold:.2f}s)")
-
-        def after_cold():
-            w.stage_s["cold_start"] += cold
-            self._begin_load(w)
-        self._begin_stage(w, COLD_START)
-        self._schedule(t + cold, w, after_cold)
+        if self._tl:
+            self._log(w.id, f"invoke(cold={cold:.2f}s)")
+        w.state = COLD_START
+        w._stage_started = self.t
+        self._schedule(t + cold, w, _OP_COLD_DONE, cold)
         return w
 
+    def _h_cold_done(self, w: _Worker, cold):
+        w.s_cold += cold
+        self._begin_load(w)
+
     def _begin_load(self, w: _Worker):
-        self._begin_stage(w, STATE_LOAD)
+        w.state = STATE_LOAD
+        w._stage_started = self.t
         dur = self.plan.fetch_s
         if w.replay_rounds:
             # replay compute for rounds lost since the last checkpoint
             dur += w.replay_rounds * (self.plan.batches_per_round
                                       * self.plan.compute_s_per_batch)
+        self._schedule(self.t + dur, w, _OP_LOADED, dur)
 
-        def loaded():
-            w.stage_s["fetch"] += self.plan.fetch_s
-            if w.replay_rounds:
-                w.stage_s["replay"] += dur - self.plan.fetch_s
+    def _h_loaded(self, w: _Worker, dur):
+        w.s_fetch += self.plan.fetch_s
+        if w.replay_rounds:
+            w.s_replay += dur - self.plan.fetch_s
+            if self._tl:
                 self._log(w.id, f"replayed {w.replay_rounds} rounds")
-                w.replay_rounds = 0
-            w.joined = True
-            self._begin_compute(w)
-        self._schedule(self.t + dur, w, loaded)
+            w.replay_rounds = 0
+        w.joined = True
+        self._begin_compute(w)
 
     def _round_fetch_needed(self) -> bool:
         return (not self.plan.fetch_first_round_only) and self.round_idx > 0
@@ -206,43 +254,47 @@ class EventRuntime:
     def _begin_round(self, w: _Worker):
         """Top of a round for an already-joined worker."""
         if self._round_fetch_needed():
-            self._begin_stage(w, STATE_LOAD)
-
-            def loaded():
-                self._end_stage(w, "fetch")
-                self._begin_compute(w)
-            self._schedule(self.t + self.plan.fetch_s, w, loaded)
+            w.state = STATE_LOAD
+            w._stage_started = self.t
+            self._schedule(self.t + self.plan.fetch_s, w, _OP_ROUND_LOADED)
         else:
             self._begin_compute(w)
 
+    def _h_round_loaded(self, w: _Worker, arg):
+        w.s_fetch += self.t - w._stage_started
+        self._begin_compute(w)
+
     def _begin_compute(self, w: _Worker):
-        self._begin_stage(w, COMPUTE)
+        w.state = COMPUTE
+        w._stage_started = self.t
         slow = self.faults.slowdown(w.id, self.t)
         dur = (self.plan.batches_per_round * w.work_mult
                * self.plan.compute_s_per_batch * slow)
-        if slow > 1.0:
+        if slow > 1.0 and self._tl:
             self._log(w.id, f"straggling x{slow:.1f}")
+        self._schedule(self.t + dur, w, _OP_COMPUTED)
 
-        def computed():
-            self._end_stage(w, "compute")
-            self._begin_sync(w)
-        self._schedule(self.t + dur, w, computed)
+    def _h_computed(self, w: _Worker, arg):
+        w.s_compute += self.t - w._stage_started
+        self._begin_sync(w)
 
     def _begin_sync(self, w: _Worker):
-        self._begin_stage(w, SYNC)
+        w.state = SYNC
+        w._stage_started = self.t
+        self._schedule(self.t + self.plan.sync_s * w.work_mult, w,
+                       _OP_SYNCED)
 
-        def synced():
-            self._end_stage(w, "sync")
-            w.state = WAIT_BARRIER
-            w._stage_started = self.t
-            if w.pending_recovery is not None:
-                # back at the barrier: recovery complete
-                w.pending_recovery.rejoined_time_s = self.t
-                w.pending_recovery = None
-                w.restoring = False
-            self.arrived.add(w.id)
-            self._maybe_release_barrier()
-        self._schedule(self.t + self.plan.sync_s * w.work_mult, w, synced)
+    def _h_synced(self, w: _Worker, arg):
+        w.s_sync += self.t - w._stage_started
+        w.state = WAIT_BARRIER
+        w._stage_started = self.t
+        if w.pending_recovery is not None:
+            # back at the barrier: recovery complete
+            w.pending_recovery.rejoined_time_s = self.t
+            w.pending_recovery = None
+            w.restoring = False
+        self.arrived.add(w.id)
+        self._maybe_release_barrier()
 
     # ------------------------------------------------------------ barrier
     def _expected(self) -> List[_Worker]:
@@ -259,54 +311,182 @@ class EventRuntime:
 
     def _maybe_release_barrier(self):
         expected = self._expected()
-        if not expected or any(w.id not in self.arrived for w in expected):
+        if not expected:
             return
-        release_at = max(self.t, self.barrier_not_before)
-        self._schedule(release_at, None, self._release_barrier)
-
-    def _release_barrier(self):
-        expected = self._expected()
-        if any(w.id not in self.arrived for w in expected):
-            return                      # a recovery hold re-queued us
-        if self.barrier_not_before > self.t:
-            self._schedule(self.barrier_not_before, None,
-                           self._release_barrier)
-            return
-        # byzantine accounting for this aggregation round; masking needs
-        # a feasible trimmed aggregate (W > 2*trim, see recovery.py) AND
-        # no more byzantine contributions than the trim width
-        n_byz = sum(1 for w in expected if w.byzantine)
-        if n_byz:
-            feasible = len(expected) > 2 * self.robust_trim
-            if feasible and n_byz <= self.robust_trim:
-                self.masked += n_byz
-            else:
-                self.poisoned += n_byz
-        batches = sum(self.plan.batches_per_round * w.work_mult
-                      for w in expected)
-        self.pool -= batches
-        self.round_idx += 1
-        self.arrived.clear()
-        self._log(-1, f"barrier round={self.round_idx} "
-                      f"workers={len(expected)}")
+        arrived = self.arrived
         for w in expected:
-            w.stage_s["wait"] += self.t - w._stage_started
-            self._begin_update(w)
-        if self.autoscaler is not None:
-            self._autoscale_hook()
+            if w.id not in arrived:
+                return
+        release_at = max(self.t, self.barrier_not_before)
+        self._schedule(release_at, None, _OP_RELEASE)
+
+    def _h_release(self, w, arg):
+        expected = self._expected()
+        for v in expected:
+            if v.id not in self.arrived:
+                return                  # a recovery hold re-queued us
+        if self.barrier_not_before > self.t:
+            self._schedule(self.barrier_not_before, None, _OP_RELEASE)
+            return
+        self._barrier_rounds()
+
+    def _barrier_rounds(self):
+        """Process the barrier at ``self.t``, then keep executing whole
+        rounds inline for as long as :meth:`_fast_round` allows; fall
+        back to per-event scheduling the moment anything (fault,
+        respawn, rejoin hold, scale event, restoring worker) could
+        interleave."""
+        plan = self.plan
+        # a committed inline round processes no events, so the expected
+        # fleet (and therefore its per-round work quantum) is invariant
+        # across loop iterations — compute both once
+        expected = self._expected()
+        batches = sum(plan.batches_per_round * v.work_mult
+                      for v in expected)
+        while True:
+            # byzantine accounting for this aggregation round; masking
+            # needs a feasible trimmed aggregate (W > 2*trim, see
+            # recovery.py) AND no more byzantine contributions than the
+            # trim width
+            if self._has_byz:
+                n_byz = 0
+                for v in expected:
+                    if v.byzantine:
+                        n_byz += 1
+                if n_byz:
+                    feasible = len(expected) > 2 * self.robust_trim
+                    if feasible and n_byz <= self.robust_trim:
+                        self.masked += n_byz
+                    else:
+                        self.poisoned += n_byz
+            self.pool -= batches
+            self.round_idx += 1
+            self.arrived.clear()
+            if self._tl:
+                self._log(-1, f"barrier round={self.round_idx} "
+                              f"workers={len(expected)}")
+            T = self.t
+            for v in expected:
+                v.s_wait += T - v._stage_started
+            if self.autoscaler is not None:
+                self._autoscale_hook()
+            if not expected:
+                # the whole fleet is gone (e.g. every worker crashed
+                # under takeover): mirror the reference engine, which
+                # accounts this barrier once and schedules nothing —
+                # looping would commit zero-batch rounds forever
+                return
+            fate = self._fast_round(expected, T)
+            if fate == _CLASSIC:
+                for v in expected:
+                    self._begin_update(v)
+                return
+            if fate == _EPOCH_DONE:
+                return
+            # _NEXT_BARRIER: round committed inline, self.t is the next
+            # barrier's release time; loop
+
+    def _fast_round(self, expected: List[_Worker], T: float) -> int:
+        """Attempt to run update -> (fetch) -> compute -> sync ->
+        barrier for every expected worker inline, bypassing the heap.
+
+        Legal only when nothing can interleave before the projected
+        barrier release: no pending scale-in, no restoring/replaying
+        worker, and no scheduled event at or before the release.  The
+        arithmetic reproduces the event path's floating-point operation
+        order exactly, so reports stay byte-identical to the reference
+        engine.  Timeline mode disables batching for full granularity.
+        """
+        if self._pending_scale_in or self._tl:
+            return _CLASSIC
+        plan = self.plan
+        heap = self._heap
+        t1 = T + plan.update_s
+        if self.pool <= 1e-9:
+            # final update, then the whole fleet retires
+            if heap and heap[0][0] <= t1:
+                return _CLASSIC
+            for v in expected:
+                v.s_update += t1 - T
+                if v.alive and v.done_time is None:
+                    v.state = DONE
+                    v.done_time = t1
+            self.t = t1
+            return _EPOCH_DONE
+        # Invariant: every expected worker here is alive, joined and
+        # fully recovered — a restoring worker cannot have arrived at
+        # the barrier (restoring clears in _h_synced, before arrival),
+        # and replay_rounds clears in _h_loaded, before its compute.
+        fetch = (not plan.fetch_first_round_only) and self.round_idx > 0
+        t2 = t1 + plan.fetch_s if fetch else t1
+        arrived = self.arrived
+        strag = self._strag_by_worker
+        if self._uniform and not strag:
+            # homogeneous fleet: one worker's arithmetic is everyone's
+            # (x * 1.0 is exact, so folding work_mult/slowdown away
+            # preserves the event path's floats bit-for-bit)
+            t3 = t2 + plan.batches_per_round * plan.compute_s_per_batch
+            t4 = t3 + plan.sync_s
+            release = t4 if t4 > self.barrier_not_before \
+                else self.barrier_not_before
+            if heap and heap[0][0] <= release:
+                return _CLASSIC
+            du, dc, ds = t1 - T, t3 - t2, t4 - t3
+            df = t2 - t1
+            for v in expected:
+                v.s_update += du
+                if fetch:
+                    v.s_fetch += df
+                v.s_compute += dc
+                v.s_sync += ds
+                v.state = WAIT_BARRIER
+                v._stage_started = t4
+                arrived.add(v.id)
+            self.t = release
+            return _NEXT_BARRIER
+        bpr, comp = plan.batches_per_round, plan.compute_s_per_batch
+        sync_s = plan.sync_s
+        arrivals = []
+        release = self.barrier_not_before
+        for v in expected:
+            slow = 1.0
+            for s in strag.get(v.id, ()):
+                if s.start_s <= t2 < s.end_s and s.slowdown > slow:
+                    slow = s.slowdown
+            t3 = t2 + bpr * v.work_mult * comp * slow
+            t4 = t3 + sync_s * v.work_mult
+            arrivals.append((t3, t4))
+            if t4 > release:
+                release = t4
+        if heap and heap[0][0] <= release:
+            return _CLASSIC
+        # commit: identical increments to the per-event path
+        for v, (t3, t4) in zip(expected, arrivals):
+            v.s_update += t1 - T
+            if fetch:
+                v.s_fetch += t2 - t1
+            v.s_compute += t3 - t2
+            v.s_sync += t4 - t3
+            v.state = WAIT_BARRIER
+            v._stage_started = t4
+            arrived.add(v.id)
+        self.t = release
+        return _NEXT_BARRIER
 
     def _begin_update(self, w: _Worker):
-        self._begin_stage(w, UPDATE)
+        w.state = UPDATE
+        w._stage_started = self.t
+        self._schedule(self.t + self.plan.update_s, w, _OP_UPDATED)
 
-        def updated():
-            self._end_stage(w, "update")
-            if self.pool > 1e-9 and not self._retire_if_requested(w):
-                self._begin_round(w)
-            elif w.alive and w.done_time is None:
-                w.state = DONE
-                w.done_time = self.t
+    def _h_updated(self, w: _Worker, arg):
+        w.s_update += self.t - w._stage_started
+        if self.pool > 1e-9 and not self._retire_if_requested(w):
+            self._begin_round(w)
+        elif w.alive and w.done_time is None:
+            w.state = DONE
+            w.done_time = self.t
+            if self._tl:
                 self._log(w.id, "done")
-        self._schedule(self.t + self.plan.update_s, w, updated)
 
     def _retire_if_requested(self, w: _Worker) -> bool:
         if self._pending_scale_in > 0 and len(self._expected()) > 1:
@@ -314,11 +494,15 @@ class EventRuntime:
             w.alive = False
             w.state = DONE
             w.done_time = self.t
-            self._log(w.id, "scaled in")
+            if self._tl:
+                self._log(w.id, "scaled in")
             return True
         return False
 
     # ------------------------------------------------------------ faults
+    def _h_crash(self, w, widx):
+        self._on_crash(self.workers[widx], self.t)
+
     def _on_crash(self, w: _Worker, t: float):
         if not w.alive or w.done_time is not None:
             return
@@ -326,7 +510,8 @@ class EventRuntime:
         w.alive = False
         w.state = DEAD
         self.arrived.discard(w.id)
-        self._log(w.id, "CRASH")
+        if self._tl:
+            self._log(w.id, "CRASH")
         ch = self.setup.channel
         if isinstance(self.recovery, PeerTakeover):
             # survivors fetch the dead worker's in-DB partition and
@@ -341,12 +526,14 @@ class EventRuntime:
                 extra = w.work_mult / len(survivors)
                 for v in survivors:
                     v.work_mult += extra
+                self._uniform = False
             self.barrier_not_before = max(self.barrier_not_before, rejoin)
             self.recoveries.append(RecoveryEvent(
                 worker=w.id, crash_time_s=t, rejoined_time_s=rejoin,
                 mode="takeover"))
-            self._log(w.id, f"takeover by {len(survivors)} peers")
-            self._schedule(rejoin, None, self._maybe_release_barrier)
+            if self._tl:
+                self._log(w.id, f"takeover by {len(survivors)} peers")
+            self._schedule(rejoin, None, _OP_MAYBE_RELEASE)
         else:
             replay = self.recovery.replay_rounds(self.round_idx)
             rec = RecoveryEvent(worker=w.id, crash_time_s=t,
@@ -354,11 +541,17 @@ class EventRuntime:
             self.recoveries.append(rec)
             w.restoring = True
             w.pending_recovery = rec
+            w.replay_rounds = replay
+            self._schedule(t + self.recovery.detection_s, None,
+                           _OP_RESPAWN, w.id)
 
-            def respawn():
-                self._spawn_worker(self.t, replay_rounds=replay,
-                                   existing=w)
-            self._schedule(t + self.recovery.detection_s, None, respawn)
+    def _h_respawn(self, w, widx):
+        v = self.workers[widx]
+        self._spawn_worker(self.t, replay_rounds=v.replay_rounds,
+                           existing=v)
+
+    def _h_maybe_release(self, w, arg):
+        self._maybe_release_barrier()
 
     # ------------------------------------------------------------ scaling
     def _autoscale_hook(self):
@@ -376,7 +569,8 @@ class EventRuntime:
             ideal_round_s=ideal)
         if delta > 0:
             for _ in range(delta):
-                self._log(-1, "scale out +1")
+                if self._tl:
+                    self._log(-1, "scale out +1")
                 self._spawn_worker(self.t)
             self.scale_events.append((self.t, delta))
         elif delta < 0:
@@ -392,18 +586,23 @@ class EventRuntime:
             self._spawn_worker(0.0, byzantine=i in byz).initial = True
         for c in self.faults.crashes:
             if c.worker < len(self.workers):
-                w = self.workers[c.worker]
-                self._schedule(c.time_s, None,
-                               lambda w=w, t=c.time_s:
-                               self._on_crash(w, max(t, self.t)))
+                self._schedule(c.time_s, None, _OP_CRASH, c.worker)
 
+        heap = self._heap
+        workers = self.workers
+        ops = self._OPS
         guard = 0
-        while self._heap:
-            t, _, wid, gen, fn = heapq.heappop(self._heap)
-            if wid >= 0 and self.workers[wid].gen != gen:
-                continue                # event from a crashed incarnation
-            self.t = max(self.t, t)
-            fn()
+        while heap:
+            t, _, wid, gen, op, arg = heappop(heap)
+            if wid >= 0:
+                w = workers[wid]
+                if w.gen != gen:
+                    continue            # event from a crashed incarnation
+            else:
+                w = None
+            if t > self.t:
+                self.t = t
+            ops[op](self, w, arg)
             guard += 1
             if guard > 2_000_000:
                 raise RuntimeError("event-loop runaway (>2M events)")
@@ -428,10 +627,17 @@ class EventRuntime:
                                     - w.spawn_time, plan.ram_gb)
                 for w in self.workers)
 
-        stage_totals: Dict[str, float] = {}
+        stage_totals = {"cold_start": 0.0, "fetch": 0.0, "compute": 0.0,
+                        "sync": 0.0, "update": 0.0, "wait": 0.0,
+                        "replay": 0.0}
         for w in self.workers:
-            for k, v in w.stage_s.items():
-                stage_totals[k] = stage_totals.get(k, 0.0) + v
+            stage_totals["cold_start"] += w.s_cold
+            stage_totals["fetch"] += w.s_fetch
+            stage_totals["compute"] += w.s_compute
+            stage_totals["sync"] += w.s_sync
+            stage_totals["update"] += w.s_update
+            stage_totals["wait"] += w.s_wait
+            stage_totals["replay"] += w.s_replay
         alive_end = sum(1 for w in self.workers if w.alive)
         return RuntimeReport(
             arch=plan.arch, makespan_s=makespan, analytic_s=analytic,
@@ -446,18 +652,29 @@ class EventRuntime:
             scale_events=self.scale_events, timeline=self.timeline)
 
 
+# opcode -> handler, indexed by the _OP_* constants; class-level so the
+# table is built once, not per epoch
+EventRuntime._OPS = (
+    EventRuntime._h_cold_done, EventRuntime._h_loaded,
+    EventRuntime._h_round_loaded, EventRuntime._h_computed,
+    EventRuntime._h_synced, EventRuntime._h_updated,
+    EventRuntime._h_release, EventRuntime._h_maybe_release,
+    EventRuntime._h_crash, EventRuntime._h_respawn)
+
+
 def run_event_epoch(arch: str, *, n_params: int, compute_s_per_batch: float,
                     setup: ServerlessSetup = ServerlessSetup(),
                     significant_fraction: float = 0.3,
                     accumulation: int = 24,
                     faults: Optional[FaultPlan] = None,
                     recovery: Optional[RecoveryPolicy] = None,
-                    autoscaler=None, robust_trim: int = 0) -> RuntimeReport:
+                    autoscaler=None, robust_trim: int = 0,
+                    max_timeline: int = 0) -> RuntimeReport:
     """One event-driven epoch; mirrors ``simulate_epoch``'s signature."""
     plan = round_plan(arch, n_params=n_params,
                       compute_s_per_batch=compute_s_per_batch, setup=setup,
                       significant_fraction=significant_fraction,
                       accumulation=accumulation)
     return EventRuntime(plan, setup, faults=faults, recovery=recovery,
-                        autoscaler=autoscaler,
-                        robust_trim=robust_trim).run()
+                        autoscaler=autoscaler, robust_trim=robust_trim,
+                        max_timeline=max_timeline).run()

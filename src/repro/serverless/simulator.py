@@ -33,7 +33,18 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, Optional
 
+import numpy as np
+
 from repro.costmodel import pricing
+
+
+def _transfer(nbytes, bandwidth_Bps, latency_s, ops=1):
+    """Channel transfer time.  Elementwise — every argument may be a
+    Python scalar or a broadcastable numpy array, which is what lets the
+    vectorized sweep (``repro.serverless.sweep``) evaluate whole grids
+    through the *same* expressions the scalar path uses (exact
+    agreement by construction)."""
+    return nbytes / bandwidth_Bps + ops * latency_s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,7 +55,7 @@ class Channel:
     latency_s: float = 0.002                    # per operation RTT
 
     def transfer(self, nbytes: float, ops: int = 1) -> float:
-        return nbytes / self.bandwidth_Bps + ops * self.latency_s
+        return _transfer(nbytes, self.bandwidth_Bps, self.latency_s, ops)
 
 
 S3 = Channel("s3", bandwidth_Bps=0.6e9, latency_s=0.030)
@@ -117,11 +128,107 @@ class RoundPlan:
     cold_start_s: float
     model_bytes: float
     ram_gb: float
+    sync_bytes: float = 0.0       # exact per-worker wire bytes per round
+    update_bytes: float = 0.0     # (sum of the transfer() nbytes terms)
 
     @property
     def total_batches(self) -> float:
         """Epoch work for ONE worker (the pool is W times this)."""
         return self.n_rounds * self.batches_per_round
+
+    @property
+    def comm_bytes_per_round(self) -> float:
+        """Gradient-path wire bytes one worker moves per round."""
+        return self.sync_bytes + self.update_bytes
+
+
+def _round_terms(arch, *, n_params, n_workers, bandwidth_Bps, latency_s,
+                 batches_per_worker, model_bytes, minibatch_bytes,
+                 significant_fraction, accumulation):
+    """Per-round stage arithmetic for one architecture.
+
+    Elementwise: every numeric argument may be a scalar or a
+    broadcastable numpy array.  This single implementation backs BOTH
+    the scalar :func:`round_plan` and the vectorized analytic sweep
+    (``repro.serverless.sweep``), so the two agree bit-for-bit.
+
+    Alongside each stage *time* it returns the exact wire *bytes* the
+    stage moves (the sum of the ``nbytes`` arguments fed to the channel)
+    — per-op latencies contribute seconds but never bytes.
+    """
+    W = n_workers
+    bw, lat = bandwidth_Bps, latency_s
+    G = _grad_bytes(n_params)
+    nb = batches_per_worker
+
+    # every invocation reloads model + its minibatch (statelessness)
+    per_invocation_load = _transfer(model_bytes + minibatch_bytes,
+                                    bw, lat, ops=2)
+    terms = dict(fetch_s=per_invocation_load, fetch_first_round_only=False)
+
+    if arch == "spirt":
+        # one long-lived invocation per epoch computes `accumulation`
+        # minibatches; gradients averaged IN the local Redis (in-database
+        # ops): per-minibatch store + one in-db average; a single
+        # cross-worker sync per accumulation round.
+        invocations = np.maximum(1, nb // accumulation)
+        bpr = nb / invocations
+        cross = (W - 1) * _transfer(G, bw, lat, ops=2) \
+            + 2 * lat * W                       # sync queue polls
+        return dict(n_rounds=invocations, batches_per_round=bpr,
+                    sync_s=bpr * _transfer(G, bw, lat, ops=1) + cross,
+                    update_s=_transfer(0, bw, lat, ops=1),  # in-db update
+                    sync_bytes=bpr * G + (W - 1) * G,
+                    update_bytes=0 * G, **terms)
+    if arch == "mlless":
+        # per-minibatch invocations; only significant updates pushed;
+        # supervisor round-trip gates every sync step
+        pushed = significant_fraction * G
+        per_sync = (_transfer(pushed, bw, lat, ops=1)
+                    + (W - 1) * _transfer(pushed, bw, lat, ops=1)
+                    + 4 * lat                   # queue notify + supervisor
+                    + 2 * lat * W)              # supervisor fan-out
+        return dict(n_rounds=nb, batches_per_round=1.0,
+                    sync_s=per_sync,
+                    update_s=_transfer(G, bw, lat, ops=1),
+                    sync_bytes=pushed + (W - 1) * pushed,
+                    update_bytes=1.0 * G, **terms)
+    if arch == "scatterreduce":
+        # push W-1 chunks, fetch W-1 assigned chunks, push aggregate,
+        # fetch W-1 aggregated chunks
+        chunk = G / W
+        per_sync = (_transfer((W - 1) * chunk, bw, lat, ops=W - 1) * 2
+                    + _transfer(chunk, bw, lat, ops=1)
+                    + _transfer((W - 1) * chunk, bw, lat, ops=W - 1))
+        return dict(n_rounds=nb, batches_per_round=1.0,
+                    sync_s=per_sync,
+                    update_s=_transfer(G, bw, lat, ops=1),
+                    sync_bytes=(W - 1) * chunk * 2 + chunk
+                    + (W - 1) * chunk,
+                    update_bytes=1.0 * G, **terms)
+    if arch == "allreduce":
+        # everyone pushes G; the designated master then pulls all W
+        # gradients SERIALLY, aggregates and pushes the result; every
+        # worker blocks on the master (the paper's §4.2 scalability
+        # bottleneck), then fetches
+        master_path = W * _transfer(G, bw, lat, ops=1) \
+            + _transfer(G, bw, lat, ops=1)
+        per_sync = (_transfer(G, bw, lat, ops=1) + master_path
+                    + _transfer(G, bw, lat, ops=1))
+        return dict(n_rounds=nb, batches_per_round=1.0,
+                    sync_s=per_sync,
+                    update_s=_transfer(G, bw, lat, ops=1),
+                    sync_bytes=1.0 * G + (W * G + G) + G,
+                    update_bytes=1.0 * G, **terms)
+    if arch == "gpu":
+        # stateful: load once; S3 gradient exchange per step
+        per_sync = S3.transfer(G, ops=1) + (W - 1) * S3.transfer(G, ops=1)
+        terms["fetch_first_round_only"] = True
+        return dict(n_rounds=nb, batches_per_round=1.0,
+                    sync_s=per_sync, update_s=0.0,
+                    sync_bytes=1.0 * G + (W - 1) * G,
+                    update_bytes=0 * G, **terms)
+    raise ValueError(arch)
 
 
 def round_plan(arch: str, *, n_params: int, compute_s_per_batch: float,
@@ -129,71 +236,60 @@ def round_plan(arch: str, *, n_params: int, compute_s_per_batch: float,
                significant_fraction: float = 0.3,
                accumulation: int = 24) -> RoundPlan:
     """Decompose an architecture's epoch into per-round stage times."""
-    W = setup.n_workers
     ch = setup.channel
-    G = _grad_bytes(n_params)
-    nb = setup.batches_per_worker
+    terms = _round_terms(arch, n_params=n_params,
+                         n_workers=setup.n_workers,
+                         bandwidth_Bps=ch.bandwidth_Bps,
+                         latency_s=ch.latency_s,
+                         batches_per_worker=setup.batches_per_worker,
+                         model_bytes=setup.model_bytes,
+                         minibatch_bytes=setup.minibatch_bytes,
+                         significant_fraction=significant_fraction,
+                         accumulation=accumulation)
+    # float()/int() strip numpy scalar types (bit-exact) so the event
+    # engine's hot loop runs on native floats
+    return RoundPlan(arch=arch, n_workers=setup.n_workers,
+                     cold_start_s=setup.cold_start_s,
+                     compute_s_per_batch=compute_s_per_batch,
+                     model_bytes=setup.model_bytes, ram_gb=setup.ram_gb,
+                     n_rounds=int(terms["n_rounds"]),
+                     batches_per_round=float(terms["batches_per_round"]),
+                     fetch_s=float(terms["fetch_s"]),
+                     fetch_first_round_only=terms["fetch_first_round_only"],
+                     sync_s=float(terms["sync_s"]),
+                     update_s=float(terms["update_s"]),
+                     sync_bytes=float(terms["sync_bytes"]),
+                     update_bytes=float(terms["update_bytes"]))
 
-    # every invocation reloads model + its minibatch (statelessness)
-    per_invocation_load = ch.transfer(setup.model_bytes
-                                      + setup.minibatch_bytes, ops=2)
-    kw = dict(arch=arch, n_workers=W, cold_start_s=setup.cold_start_s,
-              compute_s_per_batch=compute_s_per_batch,
-              model_bytes=setup.model_bytes, ram_gb=setup.ram_gb,
-              fetch_s=per_invocation_load, fetch_first_round_only=False)
 
-    if arch == "spirt":
-        # one long-lived invocation per epoch computes `accumulation`
-        # minibatches; gradients averaged IN the local Redis (in-database
-        # ops): per-minibatch store + one in-db average; a single
-        # cross-worker sync per accumulation round.
-        invocations = max(1, nb // accumulation)
-        bpr = nb / invocations
-        cross = (W - 1) * ch.transfer(G, ops=2) \
-            + 2 * ch.latency_s * W              # sync queue polls
-        return RoundPlan(n_rounds=invocations, batches_per_round=bpr,
-                         sync_s=bpr * ch.transfer(G, ops=1) + cross,
-                         update_s=ch.transfer(0, ops=1),  # in-db update
-                         **kw)
-    if arch == "mlless":
-        # per-minibatch invocations; only significant updates pushed;
-        # supervisor round-trip gates every sync step
-        pushed = significant_fraction * G
-        per_sync = (ch.transfer(pushed, ops=1)
-                    + (W - 1) * ch.transfer(pushed, ops=1)
-                    + 4 * ch.latency_s          # queue notify + supervisor
-                    + 2 * ch.latency_s * W)     # supervisor fan-out
-        return RoundPlan(n_rounds=nb, batches_per_round=1.0,
-                         sync_s=per_sync,
-                         update_s=ch.transfer(G, ops=1), **kw)
-    if arch == "scatterreduce":
-        # push W-1 chunks, fetch W-1 assigned chunks, push aggregate,
-        # fetch W-1 aggregated chunks
-        chunk = G / W
-        per_sync = (ch.transfer((W - 1) * chunk, ops=W - 1) * 2
-                    + ch.transfer(chunk, ops=1)
-                    + ch.transfer((W - 1) * chunk, ops=W - 1))
-        return RoundPlan(n_rounds=nb, batches_per_round=1.0,
-                         sync_s=per_sync,
-                         update_s=ch.transfer(G, ops=1), **kw)
-    if arch == "allreduce":
-        # everyone pushes G; the designated master then pulls all W
-        # gradients SERIALLY, aggregates and pushes the result; every
-        # worker blocks on the master (the paper's §4.2 scalability
-        # bottleneck), then fetches
-        master_path = W * ch.transfer(G, ops=1) + ch.transfer(G, ops=1)
-        per_sync = (ch.transfer(G, ops=1) + master_path
-                    + ch.transfer(G, ops=1))
-        return RoundPlan(n_rounds=nb, batches_per_round=1.0,
-                         sync_s=per_sync,
-                         update_s=ch.transfer(G, ops=1), **kw)
+def _epoch_terms(*, n_rounds, batches_per_round, fetch_s,
+                 fetch_first_round_only, sync_s, update_s, sync_bytes,
+                 update_bytes, compute_s_per_batch, cold_start_s,
+                 batches_per_worker):
+    """Epoch-level sums over the round terms.  Elementwise (scalars or
+    arrays), shared by :func:`simulate_epoch` and the vectorized sweep
+    so the closed forms agree bit-for-bit."""
+    fetch = fetch_s * (1 if fetch_first_round_only else n_rounds)
+    compute = (n_rounds * batches_per_round) * compute_s_per_batch
+    sync = n_rounds * sync_s
+    update = n_rounds * update_s
+    # same association order as StageBreakdown.total
+    per_worker = (fetch + compute + sync + update) + cold_start_s
+    return dict(fetch=fetch, compute=compute, sync=sync, update=update,
+                per_worker=per_worker,
+                per_batch=per_worker / batches_per_worker,
+                # exact wire bytes: latency ops contribute seconds, not
+                # phantom bytes (ISSUE 2 satellite fix)
+                comm_bytes=n_rounds * (sync_bytes + update_bytes))
+
+
+def _epoch_cost(arch, per_worker_s, ram_gb, n_workers):
+    """(cost_per_worker, total_cost); elementwise in the numeric args."""
     if arch == "gpu":
-        # stateful: load once; S3 gradient exchange per step
-        per_sync = S3.transfer(G, ops=1) + (W - 1) * S3.transfer(G, ops=1)
-        kw["fetch_first_round_only"] = True
-        return RoundPlan(n_rounds=nb, batches_per_round=1.0,
-                         sync_s=per_sync, update_s=0.0, **kw)
-    raise ValueError(arch)
+        cost_worker = pricing.gpu_cost(per_worker_s)
+    else:
+        cost_worker = pricing.lambda_cost(per_worker_s, ram_gb)
+    return cost_worker, cost_worker * n_workers
 
 
 def simulate_epoch(arch: str, *, n_params: int,
@@ -213,30 +309,25 @@ def simulate_epoch(arch: str, *, n_params: int,
                       compute_s_per_batch=compute_s_per_batch, setup=setup,
                       significant_fraction=significant_fraction,
                       accumulation=accumulation)
-    W = setup.n_workers
-    ch = setup.channel
-    nb = setup.batches_per_worker
-    stages = StageBreakdown()
-    stages.fetch = plan.fetch_s * (1 if plan.fetch_first_round_only
-                                   else plan.n_rounds)
-    stages.compute = plan.total_batches * compute_s_per_batch
-    stages.sync = plan.n_rounds * plan.sync_s
-    stages.update = plan.n_rounds * plan.update_s
-
-    per_worker = stages.total + setup.cold_start_s
-    per_batch = per_worker / nb
-    comm = stages.sync * ch.bandwidth_Bps  # approx bytes equivalent
-    if arch == "gpu":
-        cost_worker = pricing.gpu_cost(per_worker)
-        total_cost = cost_worker * W
-    else:
-        cost_worker = pricing.lambda_cost(per_worker, setup.ram_gb)
-        total_cost = cost_worker * W
-    return EpochReport(arch=arch, per_batch_s=per_batch,
-                       per_worker_s=per_worker,
-                       total_time_s=per_worker,   # workers run in parallel
+    ep = _epoch_terms(n_rounds=plan.n_rounds,
+                      batches_per_round=plan.batches_per_round,
+                      fetch_s=plan.fetch_s,
+                      fetch_first_round_only=plan.fetch_first_round_only,
+                      sync_s=plan.sync_s, update_s=plan.update_s,
+                      sync_bytes=plan.sync_bytes,
+                      update_bytes=plan.update_bytes,
+                      compute_s_per_batch=compute_s_per_batch,
+                      cold_start_s=setup.cold_start_s,
+                      batches_per_worker=setup.batches_per_worker)
+    stages = StageBreakdown(fetch=ep["fetch"], compute=ep["compute"],
+                            sync=ep["sync"], update=ep["update"])
+    cost_worker, total_cost = _epoch_cost(arch, ep["per_worker"],
+                                          setup.ram_gb, setup.n_workers)
+    return EpochReport(arch=arch, per_batch_s=ep["per_batch"],
+                       per_worker_s=ep["per_worker"],
+                       total_time_s=ep["per_worker"],  # workers in parallel
                        stages=stages,
-                       comm_bytes_per_worker=comm,
+                       comm_bytes_per_worker=ep["comm_bytes"],
                        cost_per_worker=cost_worker,
                        total_cost=total_cost, ram_gb=setup.ram_gb)
 
@@ -262,6 +353,16 @@ PAPER_TABLE2 = {
         "gpu": (139.00 / 24, None, 0.0203, 0.0812),
     },
 }
+
+
+def paper_compute_anchor(arch: str, model: str = "mobilenet") -> float:
+    """Compute share of the paper's measured per-batch time: the
+    non-compute stages account for ~15% of a serverless batch (~10% for
+    the GPU baseline), so simulators anchored on Table 2 feed this as
+    ``compute_s_per_batch``.  Shared by ``benchmarks/fault_tolerance``,
+    ``benchmarks/pareto_sweep`` and the examples — one calibration,
+    one place."""
+    return PAPER_TABLE2[model][arch][0] * (0.9 if arch == "gpu" else 0.85)
 
 
 def paper_cost_check(model: str, arch: str) -> Dict[str, float]:

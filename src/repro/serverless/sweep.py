@@ -1,0 +1,435 @@
+"""High-throughput Monte-Carlo sweep engine over the serverless models.
+
+The paper's contribution is a *surface* — cost and makespan across five
+architectures and many configurations — and every chart the ROADMAP
+asks for (elastic pricing sweeps, fault-rate stress grids, Pareto
+fronts) needs `simulate_epoch` / the event runtime evaluated thousands
+of times.  This module provides the three performance layers:
+
+  1. **Vectorized analytic path** — :func:`sweep_analytic` evaluates an
+     entire :class:`SweepGrid` (arch x n_workers x RAM tier x channel x
+     accumulation x significant_fraction) through the *same*
+     elementwise formulas the scalar ``simulate_epoch`` uses
+     (``simulator._round_terms`` / ``_epoch_terms`` / ``_epoch_cost``),
+     just on numpy arrays: one block of array ops per
+     (arch, channel) pair instead of one Python call per point, with
+     bit-exact agreement against the scalar path
+     (``tests/test_sweep.py``).
+
+  2. **Seeded multi-replicate event sweep** — :func:`sweep_events` fans
+     fault-injected :func:`~repro.serverless.runtime.run_event_epoch`
+     grid points across processes, drawing one reproducible
+     :meth:`FaultPlan.random` per (point, replicate) seed, and
+     aggregates mean / p50 / p95 time-to-recover, makespan and cost
+     overhead per point.
+
+  3. **Pareto extraction** — :func:`pareto_front` returns the
+     non-dominated (cost, makespan) subset, which
+     ``benchmarks/pareto_sweep.py`` charts per architecture.
+
+Everything is deterministic from (grid, seed): replicate seeds are a
+pure function of the point index, so any cell of any chart can be
+re-run in isolation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing
+import os
+from concurrent.futures import ProcessPoolExecutor
+from typing import Callable, Iterator, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.serverless.autoscale import ReactiveAutoscaler
+from repro.serverless.faults import FaultPlan
+from repro.serverless.recovery import CheckpointRestore, PeerTakeover
+from repro.serverless.runtime import RuntimeReport, run_event_epoch
+from repro.serverless.simulator import (ARCHS, REDIS, Channel,
+                                        ServerlessSetup, _epoch_cost,
+                                        _epoch_terms, _round_terms,
+                                        simulate_epoch)
+
+ComputeModel = Union[float, Callable[[str, float], float]]
+
+
+def ram_scaled_compute(anchor_s_per_batch: float, *,
+                       ref_ram_gb: float = 2.0) -> Callable[[str, float],
+                                                            float]:
+    """Lambda allocates vCPU proportionally to RAM, so per-batch compute
+    shrinks as the tier grows; the GPU baseline's compute is fixed by
+    the accelerator, not the tier.  Returns a compute model for
+    :class:`SweepGrid` anchored at ``ref_ram_gb``."""
+    def model(arch: str, ram_gb: float) -> float:
+        if arch == "gpu":
+            return anchor_s_per_batch
+        return anchor_s_per_batch * (ref_ram_gb / ram_gb)
+    return model
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepGrid:
+    """Cross-product axes + fixed epoch parameters for an analytic sweep.
+
+    ``compute_s_per_batch`` is either a constant or a callable
+    ``(arch, ram_gb) -> seconds`` (see :func:`ram_scaled_compute`);
+    either way it is resolved per (arch, RAM tier), never per point, so
+    the vectorized path stays a handful of array ops.
+    """
+    n_params: int
+    compute_s_per_batch: ComputeModel
+    archs: Tuple[str, ...] = ARCHS
+    n_workers: Tuple[int, ...] = (4,)
+    ram_gb: Tuple[float, ...] = (2.0,)
+    channels: Tuple[Channel, ...] = (REDIS,)
+    accumulation: Tuple[int, ...] = (24,)
+    significant_fraction: Tuple[float, ...] = (0.3,)
+    batches_per_worker: int = 24
+    cold_start_s: float = 2.5
+    model_bytes: float = 17e6
+    minibatch_bytes: float = 512 * 32 * 32 * 3 * 4
+
+    @property
+    def n_points(self) -> int:
+        return (len(self.archs) * len(self.channels) * len(self.n_workers)
+                * len(self.ram_gb) * len(self.accumulation)
+                * len(self.significant_fraction))
+
+    def compute_for(self, arch: str, ram_gb: float) -> float:
+        c = self.compute_s_per_batch
+        return float(c(arch, ram_gb)) if callable(c) else float(c)
+
+
+def iter_grid(grid: SweepGrid) -> Iterator[dict]:
+    """Scalar enumeration of the grid, in the exact order the
+    vectorized sweep lays points out (arch, channel outer; then
+    n_workers, ram, accumulation, significant_fraction with the last
+    axis fastest)."""
+    for arch in grid.archs:
+        for ch in grid.channels:
+            for W in grid.n_workers:
+                for ram in grid.ram_gb:
+                    for acc in grid.accumulation:
+                        for sig in grid.significant_fraction:
+                            yield dict(
+                                arch=arch, channel=ch, n_workers=W,
+                                ram_gb=ram, accumulation=acc,
+                                significant_fraction=sig,
+                                compute_s_per_batch=grid.compute_for(
+                                    arch, ram))
+
+
+def point_setup(grid: SweepGrid, point: dict) -> ServerlessSetup:
+    """The :class:`ServerlessSetup` equivalent of one grid point."""
+    return ServerlessSetup(n_workers=point["n_workers"],
+                           batches_per_worker=grid.batches_per_worker,
+                           ram_gb=point["ram_gb"],
+                           cold_start_s=grid.cold_start_s,
+                           model_bytes=grid.model_bytes,
+                           minibatch_bytes=grid.minibatch_bytes,
+                           channel=point["channel"])
+
+
+def scalar_sweep(grid: SweepGrid) -> list:
+    """The equivalent loop of scalar ``simulate_epoch`` calls — the
+    baseline the vectorized path is benchmarked (and exactness-tested)
+    against."""
+    out = []
+    for p in iter_grid(grid):
+        out.append(simulate_epoch(
+            p["arch"], n_params=grid.n_params,
+            compute_s_per_batch=p["compute_s_per_batch"],
+            setup=point_setup(grid, p),
+            significant_fraction=p["significant_fraction"],
+            accumulation=p["accumulation"]))
+    return out
+
+
+@dataclasses.dataclass
+class AnalyticSweep:
+    """Columnar result of :func:`sweep_analytic` (one row per point)."""
+    grid: SweepGrid
+    arch: np.ndarray                  # str
+    channel_idx: np.ndarray           # index into grid.channels
+    n_workers: np.ndarray
+    ram_gb: np.ndarray
+    accumulation: np.ndarray
+    significant_fraction: np.ndarray
+    compute_s_per_batch: np.ndarray
+    fetch_s: np.ndarray
+    compute_s: np.ndarray
+    sync_s: np.ndarray
+    update_s: np.ndarray
+    per_worker_s: np.ndarray
+    per_batch_s: np.ndarray
+    comm_bytes_per_worker: np.ndarray
+    cost_per_worker: np.ndarray
+    total_cost: np.ndarray
+
+    def __len__(self) -> int:
+        return len(self.per_worker_s)
+
+    def point(self, i: int) -> dict:
+        """One row as a dict (channel resolved back to its object)."""
+        return dict(arch=str(self.arch[i]),
+                    channel=self.grid.channels[int(self.channel_idx[i])],
+                    n_workers=int(self.n_workers[i]),
+                    ram_gb=float(self.ram_gb[i]),
+                    accumulation=int(self.accumulation[i]),
+                    significant_fraction=float(
+                        self.significant_fraction[i]),
+                    compute_s_per_batch=float(self.compute_s_per_batch[i]),
+                    per_worker_s=float(self.per_worker_s[i]),
+                    total_cost=float(self.total_cost[i]))
+
+    def mask(self, arch: Optional[str] = None) -> np.ndarray:
+        return (np.ones(len(self), bool) if arch is None
+                else self.arch == arch)
+
+
+def sweep_analytic(grid: SweepGrid) -> AnalyticSweep:
+    """Evaluate the whole grid in one block of array ops per
+    architecture — exact agreement with :func:`scalar_sweep`.
+
+    The (channel, n_workers, ram, accumulation, significant_fraction)
+    mesh is built once and shared by every architecture block; results
+    land in preallocated columns by slice assignment, so per-point
+    Python cost is zero and per-op numpy overhead amortizes with grid
+    size."""
+    W_ax = np.asarray(grid.n_workers)
+    ram_ax = np.asarray(grid.ram_gb, float)
+    acc_ax = np.asarray(grid.accumulation)
+    sig_ax = np.asarray(grid.significant_fraction, float)
+    bw_ax = np.asarray([c.bandwidth_Bps for c in grid.channels])
+    lat_ax = np.asarray([c.latency_s for c in grid.channels])
+    ch_ix, W, ram_ix, acc, sig = (m.ravel() for m in np.meshgrid(
+        np.arange(len(grid.channels)), W_ax, np.arange(len(ram_ax)),
+        acc_ax, sig_ax, indexing="ij"))
+    bw, lat, ram = bw_ax[ch_ix], lat_ax[ch_ix], ram_ax[ram_ix]
+    n = len(W)                         # points per architecture block
+    N = n * len(grid.archs)
+
+    arch_col = np.empty(N, dtype=f"U{max(len(a) for a in grid.archs)}")
+    out = {k: np.empty(N) for k in
+           ("fetch_s", "compute_s", "sync_s", "update_s", "per_worker_s",
+            "per_batch_s", "comm_bytes_per_worker", "cost_per_worker",
+            "total_cost", "compute_s_per_batch")}
+    for ai, arch in enumerate(grid.archs):
+        # compute model resolved once per (arch, RAM tier)
+        comp = np.asarray([grid.compute_for(arch, r)
+                           for r in ram_ax])[ram_ix]
+        terms = _round_terms(
+            arch, n_params=grid.n_params, n_workers=W,
+            bandwidth_Bps=bw, latency_s=lat,
+            batches_per_worker=grid.batches_per_worker,
+            model_bytes=grid.model_bytes,
+            minibatch_bytes=grid.minibatch_bytes,
+            significant_fraction=sig, accumulation=acc)
+        ep = _epoch_terms(
+            n_rounds=terms["n_rounds"],
+            batches_per_round=terms["batches_per_round"],
+            fetch_s=terms["fetch_s"],
+            fetch_first_round_only=terms["fetch_first_round_only"],
+            sync_s=terms["sync_s"], update_s=terms["update_s"],
+            sync_bytes=terms["sync_bytes"],
+            update_bytes=terms["update_bytes"],
+            compute_s_per_batch=comp,
+            cold_start_s=grid.cold_start_s,
+            batches_per_worker=grid.batches_per_worker)
+        cost_w, cost_t = _epoch_cost(arch, ep["per_worker"], ram, W)
+        lo, hi = ai * n, (ai + 1) * n
+        arch_col[lo:hi] = arch
+        out["compute_s_per_batch"][lo:hi] = comp
+        out["fetch_s"][lo:hi] = ep["fetch"]
+        out["compute_s"][lo:hi] = ep["compute"]
+        out["sync_s"][lo:hi] = ep["sync"]
+        out["update_s"][lo:hi] = ep["update"]
+        out["per_worker_s"][lo:hi] = ep["per_worker"]
+        out["per_batch_s"][lo:hi] = ep["per_batch"]
+        out["comm_bytes_per_worker"][lo:hi] = ep["comm_bytes"]
+        out["cost_per_worker"][lo:hi] = cost_w
+        out["total_cost"][lo:hi] = cost_t
+    tile = len(grid.archs)
+    return AnalyticSweep(grid=grid, arch=arch_col,
+                         channel_idx=np.tile(ch_ix, tile),
+                         n_workers=np.tile(W, tile),
+                         ram_gb=np.tile(ram, tile),
+                         accumulation=np.tile(acc, tile),
+                         significant_fraction=np.tile(sig, tile), **out)
+
+
+def pareto_front(costs: Sequence[float],
+                 times: Sequence[float]) -> np.ndarray:
+    """Indices of the non-dominated (minimize cost, minimize time)
+    points, in increasing-cost order."""
+    costs = np.asarray(costs, float)
+    times = np.asarray(times, float)
+    order = np.lexsort((times, costs))      # by cost, then time
+    front: List[int] = []
+    best_t = np.inf
+    for i in order:
+        if times[i] < best_t:
+            front.append(int(i))
+            best_t = times[i]
+    return np.asarray(front, int)
+
+
+# ---------------------------------------------------------------------------
+# Layer 3: seeded multi-replicate event-engine sweep
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FaultRates:
+    """Per-epoch expected fault rates fed to :meth:`FaultPlan.random`."""
+    crash_rate: float = 0.0
+    straggler_rate: float = 0.0
+    byzantine_fraction: float = 0.0
+    storm_prob: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class EventSweepPoint:
+    """One event-engine configuration to replicate under random faults.
+
+    ``recovery="auto"`` maps to SPIRT's peer takeover for the spirt
+    architecture and checkpoint-restore for everything else (the
+    pairing ``benchmarks/fault_tolerance.py`` measures);
+    ``autoscale_max > 0`` attaches a :class:`ReactiveAutoscaler` with
+    the given bounds.
+    """
+    arch: str
+    n_params: int
+    compute_s_per_batch: float
+    setup: ServerlessSetup = ServerlessSetup()
+    significant_fraction: float = 0.3
+    accumulation: int = 24
+    recovery: str = "auto"             # "auto" | "restore" | "takeover"
+    checkpoint_every: int = 4
+    autoscale_min: int = 1
+    autoscale_max: int = 0             # 0 => fixed fleet
+    robust_trim: int = 0
+    label: str = ""
+
+
+@dataclasses.dataclass
+class EventPointStats:
+    """Replicate aggregates for one sweep point."""
+    point: EventSweepPoint
+    n_replicates: int
+    analytic_makespan_s: float
+    analytic_cost: float
+    makespan_mean_s: float
+    makespan_p50_s: float
+    makespan_p95_s: float
+    ttr_mean_s: float
+    ttr_p50_s: float
+    ttr_p95_s: float
+    cost_mean: float
+    cost_overhead_mean: float
+    cost_overhead_p50: float
+    cost_overhead_p95: float
+
+
+def _replicate_seed(base_seed: int, point_idx: int, replicate: int) -> int:
+    # disjoint, reproducible streams per (point, replicate)
+    return base_seed + 100_003 * point_idx + replicate
+
+
+def _resolve_recovery(point: EventSweepPoint):
+    mode = point.recovery
+    if mode == "auto":
+        mode = "takeover" if point.arch == "spirt" else "restore"
+    if mode == "takeover":
+        return PeerTakeover()
+    return CheckpointRestore(checkpoint_every=point.checkpoint_every)
+
+
+def run_point_replicate(point: EventSweepPoint, rates: FaultRates,
+                        seed: int, horizon_s: float) -> RuntimeReport:
+    """One seeded fault-injected epoch of one sweep point."""
+    faults = FaultPlan.random(
+        seed=seed, n_workers=point.setup.n_workers, horizon_s=horizon_s,
+        crash_rate=rates.crash_rate, straggler_rate=rates.straggler_rate,
+        byzantine_fraction=rates.byzantine_fraction,
+        storm_prob=rates.storm_prob)
+    autoscaler = (ReactiveAutoscaler(min_workers=point.autoscale_min,
+                                     max_workers=point.autoscale_max)
+                  if point.autoscale_max > 0 else None)
+    return run_event_epoch(
+        point.arch, n_params=point.n_params,
+        compute_s_per_batch=point.compute_s_per_batch, setup=point.setup,
+        significant_fraction=point.significant_fraction,
+        accumulation=point.accumulation, faults=faults,
+        recovery=_resolve_recovery(point), autoscaler=autoscaler,
+        robust_trim=point.robust_trim)
+
+
+def _run_point_job(job) -> List[Tuple[float, float, float]]:
+    """Worker-process entry: all replicates of one point.  Module-level
+    so it pickles under ProcessPoolExecutor."""
+    point, rates, seeds, horizon_s, base_makespan = job
+    out = []
+    for s in seeds:
+        rep = run_point_replicate(point, rates, s, horizon_s)
+        ttr = (rep.time_to_recover_s if rep.recoveries
+               else max(rep.makespan_s - base_makespan, 0.0))
+        out.append((rep.makespan_s, rep.total_cost, ttr))
+    return out
+
+
+def sweep_events(points: Sequence[EventSweepPoint], *,
+                 rates: FaultRates = FaultRates(),
+                 n_replicates: int = 8, seed: int = 0,
+                 processes: Optional[int] = None) -> List[EventPointStats]:
+    """Replicate every point ``n_replicates`` times under seeded random
+    faults, fanning points across ``processes`` worker processes
+    (default: cpu count, capped at 8; pass 0/1 to run inline), and
+    aggregate mean/p50/p95 makespan, time-to-recover and cost overhead.
+    """
+    jobs = []
+    bases = []
+    for i, p in enumerate(points):
+        base = simulate_epoch(p.arch, n_params=p.n_params,
+                              compute_s_per_batch=p.compute_s_per_batch,
+                              setup=p.setup,
+                              significant_fraction=p.significant_fraction,
+                              accumulation=p.accumulation)
+        seeds = tuple(_replicate_seed(seed, i, r)
+                      for r in range(n_replicates))
+        jobs.append((p, rates, seeds, base.per_worker_s, base.per_worker_s))
+        bases.append(base)
+    if processes is None:
+        processes = min(os.cpu_count() or 1, 8)
+    if processes > 1 and len(jobs) > 1:
+        # spawn, not fork: this module (transitively) imports jax, whose
+        # thread pools make forking the parent deadlock-prone (jax warns
+        # on os.fork()).  Spawned workers pay one interpreter+import
+        # start-up each, amortized across the whole sweep — prefer
+        # processes=1 for small grids.
+        ctx = multiprocessing.get_context("spawn")
+        with ProcessPoolExecutor(max_workers=processes,
+                                 mp_context=ctx) as ex:
+            raw = list(ex.map(_run_point_job, jobs))
+    else:
+        raw = [_run_point_job(j) for j in jobs]
+
+    stats = []
+    for p, base, trips in zip(points, bases, raw):
+        mk = np.asarray([t[0] for t in trips])
+        cost = np.asarray([t[1] for t in trips])
+        ttr = np.asarray([t[2] for t in trips])
+        over = cost / base.total_cost - 1.0
+        stats.append(EventPointStats(
+            point=p, n_replicates=n_replicates,
+            analytic_makespan_s=base.per_worker_s,
+            analytic_cost=base.total_cost,
+            makespan_mean_s=float(mk.mean()),
+            makespan_p50_s=float(np.percentile(mk, 50)),
+            makespan_p95_s=float(np.percentile(mk, 95)),
+            ttr_mean_s=float(ttr.mean()),
+            ttr_p50_s=float(np.percentile(ttr, 50)),
+            ttr_p95_s=float(np.percentile(ttr, 95)),
+            cost_mean=float(cost.mean()),
+            cost_overhead_mean=float(over.mean()),
+            cost_overhead_p50=float(np.percentile(over, 50)),
+            cost_overhead_p95=float(np.percentile(over, 95))))
+    return stats

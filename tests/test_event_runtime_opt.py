@@ -1,0 +1,163 @@
+"""Regression: the optimized EventRuntime reproduces the frozen PR 1
+reference engine (``runtime_ref``) byte-for-byte.
+
+Every scenario class the runtime supports — fault-free, crash under
+both recovery policies, stragglers, cold-start storms, byzantine
+bookkeeping, scheduled and reactive autoscaling, and randomized mixed
+fault plans — is run through both engines and every ``RuntimeReport``
+field is compared with EXACT equality (no tolerances): the optimized
+engine's inline round batching is only legal because it reproduces the
+event path's floating-point operation order.
+"""
+import math
+
+import pytest
+
+from repro.serverless import (ByzantineWorker, CheckpointRestore,
+                              ColdStartStorm, FaultPlan, PeerTakeover,
+                              ReactiveAutoscaler, ScheduledScaler,
+                              ServerlessSetup, Straggler, WorkerCrash)
+from repro.serverless import runtime as opt
+from repro.serverless import runtime_ref as ref
+from repro.serverless.simulator import ARCHS
+
+N_PARAMS = int(4.2e6)
+COMP = 0.9
+
+
+def _run(mod, arch, **kw):
+    return mod.run_event_epoch(arch, n_params=N_PARAMS,
+                               compute_s_per_batch=COMP,
+                               setup=ServerlessSetup(), **kw)
+
+
+def _assert_reports_identical(a, b, ctx=""):
+    for field in ("arch", "makespan_s", "analytic_s", "rounds",
+                  "work_done_batches", "n_workers_start", "n_workers_peak",
+                  "n_workers_end", "total_cost", "stage_totals",
+                  "poisoned_updates", "masked_updates", "scale_events"):
+        va, vb = getattr(a, field), getattr(b, field)
+        assert va == vb, (ctx, field, va, vb)
+    assert len(a.recoveries) == len(b.recoveries), ctx
+    for x, y in zip(a.recoveries, b.recoveries):
+        assert (x.worker, x.crash_time_s, x.mode) == \
+            (y.worker, y.crash_time_s, y.mode), ctx
+        assert x.rejoined_time_s == y.rejoined_time_s or (
+            math.isnan(x.rejoined_time_s)
+            and math.isnan(y.rejoined_time_s)), ctx
+
+
+def _scenarios(base_makespan):
+    crash = FaultPlan(crashes=(WorkerCrash(1, 0.4 * base_makespan),))
+    return {
+        "fault_free": {},
+        "crash_restore": dict(
+            faults=crash, recovery=CheckpointRestore(checkpoint_every=4)),
+        "crash_takeover": dict(faults=crash, recovery=PeerTakeover()),
+        "double_crash": dict(
+            faults=FaultPlan(crashes=(WorkerCrash(1, 0.3 * base_makespan),
+                                      WorkerCrash(3, 0.6 * base_makespan))),
+            recovery=CheckpointRestore(checkpoint_every=4)),
+        "straggler": dict(
+            faults=FaultPlan(stragglers=(Straggler(2, slowdown=4.0),))),
+        "straggler_window": dict(
+            faults=FaultPlan(stragglers=(
+                Straggler(2, slowdown=3.0, start_s=0.2 * base_makespan,
+                          end_s=0.5 * base_makespan),))),
+        "storm": dict(faults=FaultPlan(
+            storm=ColdStartStorm(extra_s=8.0, fraction=0.5), seed=7)),
+        "byzantine_masked": dict(
+            faults=FaultPlan(byzantine=(ByzantineWorker(0),)),
+            robust_trim=1),
+        "byzantine_poisoned": dict(
+            faults=FaultPlan(byzantine=(ByzantineWorker(0),
+                                        ByzantineWorker(2)))),
+    }
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_optimized_engine_reproduces_reference(arch):
+    base = _run(ref, arch)
+    for name, kw in _scenarios(base.makespan_s).items():
+        _assert_reports_identical(_run(opt, arch, **kw),
+                                  _run(ref, arch, **kw), ctx=name)
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_optimized_engine_reproduces_reference_random_plans(arch):
+    base = _run(ref, arch)
+    for seed in range(8):
+        plan = FaultPlan.random(seed=seed, n_workers=4,
+                                horizon_s=base.makespan_s, crash_rate=0.4,
+                                straggler_rate=0.4, byzantine_fraction=0.25,
+                                storm_prob=0.5)
+        recovery = PeerTakeover() if seed % 2 else CheckpointRestore()
+        _assert_reports_identical(
+            _run(opt, arch, faults=plan, recovery=recovery, robust_trim=1),
+            _run(ref, arch, faults=plan, recovery=recovery, robust_trim=1))
+
+
+def test_optimized_engine_reproduces_reference_under_autoscaling():
+    strag = FaultPlan(stragglers=(Straggler(2, slowdown=4.0),))
+    for mk in (lambda: ScheduledScaler(schedule=((2, 4), (6, -2))),
+               lambda: ReactiveAutoscaler(max_workers=8)):
+        # autoscalers are stateful: fresh instance per engine
+        _assert_reports_identical(
+            _run(opt, "allreduce", faults=strag, autoscaler=mk()),
+            _run(ref, "allreduce", faults=strag, autoscaler=mk()))
+
+
+def test_timeline_mode_matches_reference_event_for_event():
+    """max_timeline>0 disables round batching; the recorded timeline is
+    then the reference engine's, entry for entry."""
+    base = _run(ref, "allreduce")
+    kw = dict(faults=FaultPlan(
+        crashes=(WorkerCrash(1, 0.4 * base.makespan_s),),
+        stragglers=(Straggler(2, slowdown=4.0),)),
+        recovery=CheckpointRestore(checkpoint_every=4))
+    a = _run(opt, "allreduce", max_timeline=4096, **kw)
+    b = _run(ref, "allreduce", **kw)      # reference records by default
+    _assert_reports_identical(a, b)
+    assert a.timeline == b.timeline
+    assert len(a.timeline) > 0
+
+
+def test_timeline_off_by_default():
+    rep = _run(opt, "allreduce")
+    assert rep.timeline == []
+
+
+def test_whole_fleet_crash_under_takeover_terminates():
+    """Regression: with every worker dead under PeerTakeover the
+    expected fleet is empty; a pending barrier release must account
+    once and stop (the inline round loop used to spin on zero-batch
+    rounds forever here)."""
+    kw = dict(n_params=N_PARAMS, compute_s_per_batch=COMP,
+              setup=ServerlessSetup(n_workers=2),
+              faults=FaultPlan(crashes=(WorkerCrash(0, 4.0488),
+                                        WorkerCrash(1, 4.5516))),
+              recovery=PeerTakeover())
+    a = opt.run_event_epoch("allreduce", **kw)
+    b = ref.run_event_epoch("allreduce", **kw)
+    _assert_reports_identical(a, b)
+    assert a.n_workers_end == 0
+    assert a.work_done_batches < 2 * ServerlessSetup().batches_per_worker
+
+
+@pytest.mark.parametrize("n_workers", [2, 3, 4])
+def test_reference_identity_under_heavy_crash_plans(n_workers):
+    """Small fleets + high crash rates probe the takeover/restore corner
+    cases (partial and total fleet loss) against the reference."""
+    setup = ServerlessSetup(n_workers=n_workers)
+    for seed in range(6):
+        plan = FaultPlan.random(seed=seed, n_workers=n_workers,
+                                horizon_s=60.0, crash_rate=0.9,
+                                straggler_rate=0.3)
+        for recovery in (PeerTakeover(), CheckpointRestore()):
+            ka = opt.run_event_epoch("allreduce", n_params=N_PARAMS,
+                                     compute_s_per_batch=COMP, setup=setup,
+                                     faults=plan, recovery=recovery)
+            kb = ref.run_event_epoch("allreduce", n_params=N_PARAMS,
+                                     compute_s_per_batch=COMP, setup=setup,
+                                     faults=plan, recovery=recovery)
+            _assert_reports_identical(ka, kb)

@@ -33,6 +33,93 @@ def test_trimmed_mean_validates_width():
         trimmed_mean(jnp.ones((2, 4)), trim=1)
 
 
+def test_trimmed_mean_fast_path_matches_sort_reference():
+    """trim=1 masks one min and one max entry and sums the middle
+    values (O(W), no sort — and deliberately NOT the cancellation-prone
+    (sum - min - max)/(W - 2) form); it must agree with the full-sort
+    reference path on random stacks."""
+    from repro.serverless.recovery import trimmed_mean_sort
+    rs = np.random.RandomState(3)
+    for W, shape in ((3, (16,)), (4, (8, 5)), (7, (4, 3, 2)), (16, (64,))):
+        stacked = jnp.asarray(rs.randn(W, *shape).astype(np.float32)
+                              * rs.choice([1.0, 50.0], size=(W,) + tuple(
+                                  1 for _ in shape)))
+        fast = np.asarray(trimmed_mean(stacked, trim=1))
+        slow = np.asarray(trimmed_mean_sort(stacked, trim=1))
+        np.testing.assert_allclose(fast, slow, rtol=1e-5, atol=1e-5)
+    # trim > 1 still routes through the sort path
+    stacked = jnp.asarray(rs.randn(7, 11).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(trimmed_mean(stacked, trim=2)),
+                               np.asarray(trimmed_mean_sort(stacked, 2)),
+                               rtol=1e-6)
+    # all-equal coordinates (argmin == argmax) return the common value
+    np.testing.assert_allclose(
+        np.asarray(trimmed_mean(jnp.full((5, 3), 2.5), trim=1)),
+        np.full(3, 2.5))
+
+
+def test_trimmed_mean_fast_path_survives_huge_outliers():
+    """The adversarial case the aggregator exists for: a byzantine
+    worker shipping a 1e8-scaled gradient must not destroy the honest
+    mean through fp32 cancellation (a naive (sum-min-max)/(W-2) returns
+    0 here)."""
+    from repro.serverless.recovery import trimmed_mean_sort
+    honest = np.asarray([[1e-3], [2e-3], [3e-3], [4e-3]], np.float32)
+    for evil in (1e8, -1e8, 3e7):
+        stacked = jnp.asarray(np.concatenate(
+            [honest, np.full((1, 1), evil, np.float32)]))
+        fast = np.asarray(trimmed_mean(stacked, trim=1))
+        slow = np.asarray(trimmed_mean_sort(stacked, trim=1))
+        np.testing.assert_allclose(fast, slow, rtol=1e-6)
+        # the outlier is fully masked: result stays in the honest span
+        assert honest.min() <= fast[0] <= honest.max(), (evil, fast)
+
+
+def test_flat_buffer_sync_matches_per_leaf_reference():
+    """_RobustAggregate.sync flattens the gradient pytree into one
+    contiguous fp32 buffer before the all-gather; under a real
+    multi-device shard_map it must agree with the per-leaf reference
+    path and round-trip shapes/dtypes."""
+    import subprocess
+    import sys
+    import textwrap
+    code = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
+        from repro.serverless.recovery import TrimmedMean, CoordinateMedian
+        mesh = jax.make_mesh((4,), ("data",))
+        r = np.random.RandomState(0)
+        grads = {"a": jnp.asarray(r.randn(4, 8, 3), jnp.float32),
+                 "b": jnp.asarray(r.randn(4, 5), jnp.bfloat16),
+                 "c": jnp.asarray(r.randn(4, 1, 2, 2), jnp.float32)}
+        specs = jax.tree.map(lambda g: P("data"), grads)
+        for strat in (TrimmedMean(trim=1), CoordinateMedian()):
+            f = shard_map(lambda g: strat.sync(g, (), "data")[0],
+                          mesh=mesh, in_specs=(specs,), out_specs=specs)
+            fr = shard_map(lambda g: strat.sync_per_leaf(g, (), "data")[0],
+                           mesh=mesh, in_specs=(specs,), out_specs=specs)
+            a, b = f(grads), fr(grads)
+            for k in grads:
+                assert a[k].dtype == grads[k].dtype
+                assert a[k].shape == grads[k].shape
+                np.testing.assert_allclose(
+                    np.asarray(a[k], np.float32),
+                    np.asarray(b[k], np.float32), rtol=1e-5, atol=1e-5)
+        print("OK")
+    """)
+    import os
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+
+
 def test_coordinate_median_ignores_minority():
     stacked = jnp.asarray([[1.0, 2.0], [1.2, 2.2], [0.8, 1.8],
                            [1e6, -1e6]])

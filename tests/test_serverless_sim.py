@@ -66,6 +66,71 @@ def test_event_runtime_matches_analytic_fault_free(arch):
         ServerlessSetup().n_workers * ServerlessSetup().batches_per_worker)
 
 
+def test_comm_bytes_counts_wire_bytes_not_latency():
+    """ISSUE 2 satellite: comm_bytes_per_worker must derive from the
+    RoundPlan's exact wire-byte terms — per-op latencies add seconds,
+    never bytes.  Two channels with identical bandwidth but different
+    latency therefore move identical bytes (the old
+    ``sync_s * bandwidth`` formula inflated with latency)."""
+    from repro.serverless.simulator import Channel, round_plan
+    fast = Channel("fast", bandwidth_Bps=1e9, latency_s=0.0)
+    slow = Channel("slow", bandwidth_Bps=1e9, latency_s=0.5)
+    for arch in ARCHS:
+        a = simulate_epoch(arch, n_params=N_PARAMS, compute_s_per_batch=COMP,
+                           setup=ServerlessSetup(channel=fast))
+        b = simulate_epoch(arch, n_params=N_PARAMS, compute_s_per_batch=COMP,
+                           setup=ServerlessSetup(channel=slow))
+        assert a.comm_bytes_per_worker == b.comm_bytes_per_worker, arch
+        if arch != "gpu":               # gpu syncs via S3 regardless
+            assert b.stages.sync > a.stages.sync, arch
+        # and the report total is exactly rounds x per-round wire bytes
+        plan = round_plan(arch, n_params=N_PARAMS, compute_s_per_batch=COMP,
+                          setup=ServerlessSetup(channel=fast))
+        assert a.comm_bytes_per_worker == \
+            plan.n_rounds * plan.comm_bytes_per_round, arch
+
+
+def test_comm_bytes_consistent_with_strategy_comm_bytes():
+    """Where the serverless channel model and the SPMD Strategy model
+    describe the same exchange, the byte counts must line up: the GPU
+    baseline's push-one/fetch-all is exactly ParameterServer's W x G,
+    and every architecture's external-channel traffic is bounded below
+    by its strategy's logical collective volume."""
+    np_ = pytest.importorskip("numpy")
+    from repro.core import get_strategy
+    from repro.serverless.simulator import _grad_bytes, round_plan
+    W = 4
+    setup = ServerlessSetup(n_workers=W)
+    grads_like = [np_.zeros(N_PARAMS, np_.float32)]
+    G = _grad_bytes(N_PARAMS)
+    assert G == 4 * N_PARAMS
+
+    def plan(arch, **kw):
+        return round_plan(arch, n_params=N_PARAMS, compute_s_per_batch=COMP,
+                          setup=setup, **kw)
+
+    # exact: gpu push-1 + fetch-(W-1) == ParameterServer all-see-all
+    ps = get_strategy("parameter_server")
+    assert plan("gpu").comm_bytes_per_round == ps.comm_bytes(grads_like, W)
+
+    # lower bound: external channels move at least the logical volume
+    strategies = {
+        "spirt": get_strategy("spirt"),
+        "mlless": get_strategy("mlless"),
+        "scatterreduce": get_strategy("scatterreduce"),
+        "allreduce": ps,                # λML master == parameter server
+        "gpu": ps,
+    }
+    for arch, strat in strategies.items():
+        p = plan(arch, significant_fraction=0.3)
+        if arch == "mlless":
+            logical = strat.comm_bytes(grads_like, W,
+                                       significant_fraction=0.3)
+        else:
+            logical = strat.comm_bytes(grads_like, W)
+        assert p.comm_bytes_per_round >= logical, arch
+
+
 @pytest.mark.parametrize("arch", list(ARCHS))
 def test_event_runtime_stage_totals_match_analytic(arch):
     """Per-stage busy time (summed over W workers) = W x analytic."""

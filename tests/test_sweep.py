@@ -1,0 +1,228 @@
+"""Monte-Carlo sweep engine: vectorized-vs-scalar exactness, Pareto
+extraction, seeded multi-replicate event sweeps, and (slow-marked)
+throughput floors.
+
+The exactness contract is the subsystem's foundation: the vectorized
+analytic path evaluates the *same* elementwise formulas as the scalar
+``simulate_epoch`` (``simulator._round_terms`` / ``_epoch_terms``), so
+every field must agree bit-for-bit — no tolerance."""
+import numpy as np
+import pytest
+
+from repro.serverless.simulator import REDIS, S3, Channel
+from repro.serverless.sweep import (EventSweepPoint, FaultRates, SweepGrid,
+                                    iter_grid, pareto_front, point_setup,
+                                    ram_scaled_compute, scalar_sweep,
+                                    sweep_analytic, sweep_events)
+
+N_PARAMS = int(4.2e6)
+
+
+def _default_grid(**kw) -> SweepGrid:
+    base = dict(n_params=N_PARAMS,
+                compute_s_per_batch=ram_scaled_compute(0.9),
+                n_workers=(2, 4, 8), ram_gb=(1.0, 2.0, 3.0),
+                channels=(REDIS, S3), accumulation=(8, 24),
+                significant_fraction=(0.1, 0.3, 0.9))
+    base.update(kw)
+    return SweepGrid(**base)
+
+
+def _assert_exact(grid: SweepGrid):
+    vec = sweep_analytic(grid)
+    sca = scalar_sweep(grid)
+    assert len(vec) == len(sca) == grid.n_points
+    for i, rep in enumerate(sca):
+        point = vec.point(i)
+        assert point["arch"] == rep.arch, i
+        # bit-exact, every field — shared formulas, no tolerance
+        assert vec.per_worker_s[i] == rep.per_worker_s, (i, point)
+        assert vec.per_batch_s[i] == rep.per_batch_s, (i, point)
+        assert vec.fetch_s[i] == rep.stages.fetch, (i, point)
+        assert vec.compute_s[i] == rep.stages.compute, (i, point)
+        assert vec.sync_s[i] == rep.stages.sync, (i, point)
+        assert vec.update_s[i] == rep.stages.update, (i, point)
+        assert vec.comm_bytes_per_worker[i] == rep.comm_bytes_per_worker, \
+            (i, point)
+        assert vec.cost_per_worker[i] == rep.cost_per_worker, (i, point)
+        assert vec.total_cost[i] == rep.total_cost, (i, point)
+
+
+def test_vectorized_matches_scalar_exactly_on_default_grid():
+    _assert_exact(_default_grid())          # 540 points, all archs
+
+
+def test_vectorized_point_order_matches_iter_grid():
+    grid = _default_grid(n_workers=(4,), ram_gb=(1.0, 2.0),
+                         accumulation=(24,))
+    vec = sweep_analytic(grid)
+    for i, p in enumerate(iter_grid(grid)):
+        assert vec.point(i)["arch"] == p["arch"]
+        assert vec.point(i)["n_workers"] == p["n_workers"]
+        assert vec.point(i)["ram_gb"] == p["ram_gb"]
+        assert vec.point(i)["channel"] is p["channel"]
+        assert vec.point(i)["significant_fraction"] == \
+            p["significant_fraction"]
+        setup = point_setup(grid, p)
+        assert setup.ram_gb == p["ram_gb"]
+
+
+def test_vectorized_matches_scalar_on_randomized_grids():
+    """Hypothesis property: exact agreement on arbitrary axes."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    given, settings = hyp.given, hyp.settings
+
+    pos = dict(allow_nan=False, allow_infinity=False)
+    axis_f = lambda lo, hi, n=2: st.lists(        # noqa: E731
+        st.floats(lo, hi, **pos), min_size=1, max_size=n, unique=True)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n_params=st.integers(int(1e3), int(1e8)),
+        comp=st.floats(1e-3, 50.0, **pos),
+        workers=st.lists(st.integers(1, 32), min_size=1, max_size=3,
+                         unique=True),
+        rams=axis_f(0.25, 10.0, 3),
+        accs=st.lists(st.integers(1, 48), min_size=1, max_size=2,
+                      unique=True),
+        sigs=axis_f(0.0, 1.0, 3),
+        bw=st.floats(1e6, 1e10, **pos),
+        lat=st.floats(0.0, 0.1, **pos),
+        nb=st.integers(1, 96),
+        cold=st.floats(0.0, 30.0, **pos),
+    )
+    def prop(n_params, comp, workers, rams, accs, sigs, bw, lat, nb, cold):
+        grid = SweepGrid(
+            n_params=n_params, compute_s_per_batch=comp,
+            n_workers=tuple(workers), ram_gb=tuple(rams),
+            channels=(Channel("x", bandwidth_Bps=bw, latency_s=lat),),
+            accumulation=tuple(accs),
+            significant_fraction=tuple(sigs),
+            batches_per_worker=nb, cold_start_s=cold)
+        _assert_exact(grid)
+
+    prop()
+
+
+def test_ram_scaled_compute_model():
+    m = ram_scaled_compute(0.9, ref_ram_gb=2.0)
+    assert m("allreduce", 2.0) == 0.9
+    assert m("allreduce", 4.0) == pytest.approx(0.45)   # 2x vCPU
+    assert m("allreduce", 1.0) == pytest.approx(1.8)
+    assert m("gpu", 4.0) == 0.9                         # tier-independent
+
+
+def test_pareto_front_drops_dominated_points():
+    costs = [1.0, 2.0, 3.0, 2.5, 0.5]
+    times = [5.0, 1.0, 0.5, 2.0, 9.0]
+    front = pareto_front(costs, times).tolist()
+    # index 3 is dominated by index 1 (cheaper AND faster); the rest
+    # form the front in increasing-cost order
+    assert front == [4, 0, 1, 2]
+
+
+def test_pareto_front_equal_cost_keeps_only_fastest():
+    front = pareto_front([1.0, 1.0, 2.0], [5.0, 3.0, 1.0]).tolist()
+    assert front == [1, 2]                  # index 0 dominated by 1
+
+
+def _points():
+    return [EventSweepPoint(arch="allreduce", n_params=N_PARAMS,
+                            compute_s_per_batch=0.9),
+            EventSweepPoint(arch="spirt", n_params=N_PARAMS,
+                            compute_s_per_batch=0.9),
+            EventSweepPoint(arch="allreduce", n_params=N_PARAMS,
+                            compute_s_per_batch=0.9, autoscale_max=8)]
+
+
+_RATES = FaultRates(crash_rate=0.4, straggler_rate=0.4, storm_prob=0.3)
+
+
+def test_event_sweep_is_deterministic_and_seeded():
+    a = sweep_events(_points(), rates=_RATES, n_replicates=3, seed=7,
+                     processes=1)
+    b = sweep_events(_points(), rates=_RATES, n_replicates=3, seed=7,
+                     processes=1)
+    c = sweep_events(_points(), rates=_RATES, n_replicates=3, seed=8,
+                     processes=1)
+    for x, y in zip(a, b):
+        assert x.makespan_mean_s == y.makespan_mean_s
+        assert x.ttr_p95_s == y.ttr_p95_s
+        assert x.cost_overhead_mean == y.cost_overhead_mean
+    assert any(x.makespan_mean_s != z.makespan_mean_s
+               for x, z in zip(a, c))
+
+
+def test_event_sweep_processes_match_inline():
+    inline = sweep_events(_points()[:2], rates=_RATES, n_replicates=2,
+                          seed=3, processes=1)
+    fanned = sweep_events(_points()[:2], rates=_RATES, n_replicates=2,
+                          seed=3, processes=2)
+    for x, y in zip(inline, fanned):
+        assert x.makespan_mean_s == y.makespan_mean_s
+        assert x.cost_mean == y.cost_mean
+        assert x.ttr_mean_s == y.ttr_mean_s
+
+
+def test_event_sweep_faults_cost_more_than_analytic():
+    stats = sweep_events(_points()[:1], rates=_RATES, n_replicates=4,
+                         seed=11, processes=1)[0]
+    assert stats.makespan_mean_s > stats.analytic_makespan_s
+    assert stats.cost_overhead_mean > 0
+    assert stats.makespan_p95_s >= stats.makespan_p50_s
+    assert stats.ttr_p95_s >= stats.ttr_p50_s
+
+
+@pytest.mark.slow
+def test_vectorized_sweep_50x_faster_than_scalar_loop():
+    """Acceptance floor: >=1,000-point grid, >=50x over the scalar loop
+    (run explicitly with `pytest -m slow`; timing-sensitive)."""
+    import time
+    grid = _default_grid(n_workers=(2, 4, 8, 16),
+                         ram_gb=(1.0, 2.0, 3.0, 4.0, 6.0),
+                         significant_fraction=(0.05, 0.1, 0.3, 0.5, 0.9))
+    assert grid.n_points >= 1000
+    sweep_analytic(grid)                    # warm
+    t_vec = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        sweep_analytic(grid)
+        t_vec = min(t_vec, time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    scalar_sweep(grid)
+    t_sca = time.perf_counter() - t0
+    assert t_sca / t_vec >= 50, (t_sca, t_vec)
+
+
+@pytest.mark.slow
+def test_event_runtime_5x_faster_than_reference():
+    """Acceptance floor: fault-injected epoch >=5x over the PR 1 engine
+    (run explicitly with `pytest -m slow`; timing-sensitive)."""
+    import time
+
+    from repro.serverless import (CheckpointRestore, FaultPlan,
+                                  ServerlessSetup, Straggler, WorkerCrash)
+    from repro.serverless import runtime as opt
+    from repro.serverless import runtime_ref as ref
+    base = ref.run_event_epoch("allreduce", n_params=N_PARAMS,
+                               compute_s_per_batch=0.9,
+                               setup=ServerlessSetup())
+    kw = dict(n_params=N_PARAMS, compute_s_per_batch=0.9,
+              setup=ServerlessSetup(),
+              faults=FaultPlan(
+                  crashes=(WorkerCrash(1, 0.4 * base.makespan_s),),
+                  stragglers=(Straggler(2, slowdown=4.0),)),
+              recovery=CheckpointRestore(checkpoint_every=4))
+
+    def best(mod, n=200):
+        t = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            for _ in range(n):
+                mod.run_event_epoch("allreduce", **kw)
+            t = min(t, (time.perf_counter() - t0) / n)
+        return t
+
+    t_ref, t_opt = best(ref), best(opt)
+    assert t_ref / t_opt >= 5, (t_ref, t_opt)
