@@ -120,11 +120,11 @@ def bench_event_engine(csv_rows, quick: bool) -> dict:
                 speedup=speedup, epochs_per_s=1.0 / t_opt)
 
 
-def _pareto_points(quick: bool):
-    """The ROADMAP's elastic pricing sweep: autoscaler bounds x RAM
-    tiers x channel, per architecture."""
-    rams = (1.0, 2.0, 3.0) if quick else (1.0, 2.0, 3.0, 4.0)
-    scalers = ((0, 0), (1, 8), (2, 16))          # (min, max); 0,0 = fixed
+def elastic_pricing_points(rams, scalers):
+    """The ROADMAP's elastic pricing sweep: autoscaler (min, max)
+    bounds x RAM tiers x channel, per architecture.  Shared with
+    ``benchmarks/trace_replay.py`` so both benchmarks chart the same
+    grid and their fronts stay comparable."""
     points = []
     for arch in ARCHS:
         model = ram_scaled_compute(_compute_anchor(arch))
@@ -138,6 +138,12 @@ def _pareto_points(quick: bool):
                         autoscale_min=max(lo, 1), autoscale_max=hi,
                         label=f"ram{ram:g}/{ch.name}/as{lo}-{hi}"))
     return points
+
+
+def _pareto_points(quick: bool):
+    rams = (1.0, 2.0, 3.0) if quick else (1.0, 2.0, 3.0, 4.0)
+    scalers = ((0, 0), (1, 8), (2, 16))          # (min, max); 0,0 = fixed
+    return elastic_pricing_points(rams, scalers)
 
 
 def bench_pareto(csv_rows, quick: bool, processes) -> dict:

@@ -1,7 +1,8 @@
 """Benchmark driver — one module per paper table/figure.
 
 Prints ``name,value,derived`` CSV rows.  Usage:
-    PYTHONPATH=src python -m benchmarks.run [--only table2|fig23|table3|roofline]
+    PYTHONPATH=src python -m benchmarks.run [--only table2|fig23|table3|
+        roofline|strategy_matrix|fault_tolerance|sweep|trace]
 """
 from __future__ import annotations
 
@@ -17,7 +18,7 @@ def main() -> None:
 
     from benchmarks import (fault_tolerance, fig23_comm, pareto_sweep,
                             roofline_report, strategy_matrix, table2_cost,
-                            table3_convergence)
+                            table3_convergence, trace_replay)
     suites = {
         "table2": table2_cost.run,
         "fig23": fig23_comm.run,
@@ -26,6 +27,7 @@ def main() -> None:
         "strategy_matrix": strategy_matrix.run,
         "fault_tolerance": fault_tolerance.run,
         "sweep": pareto_sweep.run,
+        "trace": trace_replay.run,
     }
     if args.only:
         suites = {args.only: suites[args.only]}

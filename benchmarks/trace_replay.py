@@ -1,0 +1,203 @@
+"""Pareto fronts under measured fault tails vs synthetic Poisson rates.
+
+The fault-rate charts so far draw faults from ``FaultPlan.random`` —
+Poisson-thinned occurrences with uniform magnitudes.  Trace-driven
+replay (``repro.serverless.traces``) swaps those synthetic draws for
+the heavy cold-start/straggler tails measured by arXiv 2105.07806, and
+this benchmark quantifies what that substitution does to every
+cost-vs-makespan conclusion.  Three sections, recorded in
+``BENCH_trace.json``:
+
+  1. *Trace summary* — quantiles of the bundled Lambda-like trace, plus
+     a bit-reproducibility check: two ``sweep_events(..., trace=...)``
+     runs with equal seeds must agree exactly.
+  2. *Tail inflation* — per architecture, one fixed-fleet config swept
+     under the trace and under the Poisson defaults: p95/p50 makespan
+     ratios side by side (the measured tail's signature is a much
+     fatter p95).
+  3. *Pareto fronts* — the elastic pricing sweep (RAM tiers x channel x
+     autoscaler bounds) re-drawn under measured tails, with the Poisson
+     fronts alongside; both arms share crash draws (same seeds, same
+     crash sub-stream), so the delta isolates tail behaviour.
+
+Rows: trace/<section>/<name>,value,notes
+Usage:
+    PYTHONPATH=src python -m benchmarks.trace_replay [--quick]
+        [--json BENCH_trace.json] [--processes N]
+    PYTHONPATH=src python -m benchmarks.run --only trace
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from benchmarks.pareto_sweep import elastic_pricing_points
+from repro.serverless import lambda_default
+from repro.serverless.simulator import (ARCHS,
+                                        paper_compute_anchor
+                                        as _compute_anchor)
+from repro.serverless.sweep import (EventSweepPoint, FaultRates,
+                                    pareto_front, sweep_events)
+
+N_PARAMS = int(4.2e6)            # MobileNet
+CRASH_RATE = 0.1                 # shared by both arms (not trace-measured)
+
+# Poisson baseline: the synthetic defaults the trace replaces — the
+# straggler rate matches the trace's occurrence probability so the two
+# arms differ in *tails*, not in how often faults happen
+_TRACE = lambda_default()
+POISSON = FaultRates(crash_rate=CRASH_RATE,
+                     straggler_rate=_TRACE.straggler_prob,
+                     storm_prob=0.3)
+TRACED = FaultRates(crash_rate=CRASH_RATE)
+
+
+def _stats_fingerprint(stats):
+    return [(s.makespan_mean_s, s.makespan_p95_s, s.cost_mean,
+             s.ttr_p95_s) for s in stats]
+
+
+def bench_trace_summary(csv_rows, processes) -> dict:
+    tr = _TRACE
+    for field in ("cold_start_s", "straggler_slowdown",
+                  "straggler_duration_s"):
+        lo, hi = tr.support(field)
+        p50, p95 = tr.quantile(field, 0.5), tr.quantile(field, 0.95)
+        csv_rows.append((f"trace/summary/{field}_p50", p50,
+                         f"support [{lo:g}; {hi:g}] p95={p95:g}"))
+    csv_rows.append(("trace/summary/straggler_prob", tr.straggler_prob,
+                     tr.name))
+    point = [EventSweepPoint(arch="allreduce", n_params=N_PARAMS,
+                             compute_s_per_batch=0.9)]
+    a = sweep_events(point, rates=TRACED, trace=tr, n_replicates=4,
+                     seed=13, processes=processes)
+    b = sweep_events(point, rates=TRACED, trace=tr, n_replicates=4,
+                     seed=13, processes=processes)
+    reproducible = _stats_fingerprint(a) == _stats_fingerprint(b)
+    assert reproducible, "trace replay must be bit-reproducible"
+    csv_rows.append(("trace/summary/bit_reproducible", int(reproducible),
+                     "two equal-seed trace sweeps agree exactly"))
+    return dict(name=tr.name, straggler_prob=tr.straggler_prob,
+                cold_start_p50_s=tr.quantile("cold_start_s", 0.5),
+                cold_start_p95_s=tr.quantile("cold_start_s", 0.95),
+                bit_reproducible=reproducible)
+
+
+def bench_tail_inflation(csv_rows, quick: bool, processes) -> dict:
+    """p95/p50 makespan per arch: measured tails vs Poisson defaults."""
+    reps = 8 if quick else 16
+    points = [EventSweepPoint(arch=arch, n_params=N_PARAMS,
+                              compute_s_per_batch=_compute_anchor(arch),
+                              label=arch)
+              for arch in ARCHS]
+    traced = sweep_events(points, rates=TRACED, trace=_TRACE,
+                          n_replicates=reps, seed=42, processes=processes)
+    poisson = sweep_events(points, rates=POISSON, n_replicates=reps,
+                           seed=42, processes=processes)
+    out = {}
+    for t, p in zip(traced, poisson):
+        arch = t.point.arch
+        infl_t = t.makespan_p95_s / t.makespan_p50_s
+        infl_p = p.makespan_p95_s / p.makespan_p50_s
+        csv_rows.append((f"trace/tail/{arch}/p95_over_p50", infl_t,
+                         f"poisson={infl_p:.3f} reps={reps}"))
+        out[arch] = dict(
+            traced=dict(p50=t.makespan_p50_s, p95=t.makespan_p95_s,
+                        cost_mean=t.cost_mean,
+                        cost_overhead_p95=t.cost_overhead_p95),
+            poisson=dict(p50=p.makespan_p50_s, p95=p.makespan_p95_s,
+                         cost_mean=p.cost_mean,
+                         cost_overhead_p95=p.cost_overhead_p95))
+    return out
+
+
+def _pareto_points(quick: bool):
+    """The pareto_sweep grid (shared builder), trimmed for the 2-arm
+    sweep this benchmark runs."""
+    rams = (1.0, 2.0) if quick else (1.0, 2.0, 3.0)
+    scalers = ((0, 0), (1, 8)) if quick else ((0, 0), (1, 8), (2, 16))
+    return elastic_pricing_points(rams, scalers)
+
+
+def bench_pareto(csv_rows, quick: bool, processes) -> dict:
+    points = _pareto_points(quick)
+    reps = 3 if quick else 8
+    t0 = time.perf_counter()
+    traced = sweep_events(points, rates=TRACED, trace=_TRACE,
+                          n_replicates=reps, seed=42, processes=processes)
+    poisson = sweep_events(points, rates=POISSON, n_replicates=reps,
+                           seed=42, processes=processes)
+    elapsed = time.perf_counter() - t0
+    csv_rows.append(("trace/pareto/points", len(points),
+                     f"replicates={reps} x 2 arms"))
+    csv_rows.append(("trace/pareto/sims_per_s",
+                     2 * len(points) * reps / elapsed,
+                     f"{2 * len(points) * reps} epochs in {elapsed:.2f}s"))
+
+    fronts = {}
+    for arch in ARCHS:
+        arms = {}
+        for arm, stats in (("traced", traced), ("poisson", poisson)):
+            rows = [s for s in stats if s.point.arch == arch]
+            front = set(pareto_front(
+                [s.cost_mean for s in rows],
+                [s.makespan_mean_s for s in rows]).tolist())
+            arms[arm] = [
+                dict(label=s.point.label, ram_gb=s.point.setup.ram_gb,
+                     channel=s.point.setup.channel.name,
+                     autoscale_max=s.point.autoscale_max,
+                     cost_mean=s.cost_mean,
+                     makespan_mean_s=s.makespan_mean_s,
+                     makespan_p95_s=s.makespan_p95_s,
+                     cost_overhead_mean=s.cost_overhead_mean,
+                     on_front=i in front)
+                for i, s in enumerate(rows)]
+        fronts[arch] = arms
+        on_t = sorted((r["label"] for r in arms["traced"] if r["on_front"]))
+        on_p = sorted((r["label"] for r in arms["poisson"]
+                       if r["on_front"]))
+        csv_rows.append((f"trace/pareto/{arch}/front_size", len(on_t),
+                         f"poisson_front={len(on_p)}"))
+        csv_rows.append((f"trace/pareto/{arch}/front_agreement",
+                         len(set(on_t) & set(on_p))
+                         / max(len(set(on_t) | set(on_p)), 1),
+                         "Jaccard overlap of traced vs poisson fronts"))
+    return dict(points=len(points), replicates=reps, elapsed_s=elapsed,
+                fronts=fronts)
+
+
+def run(csv_rows, *, quick: bool = False, processes=None,
+        json_path: str = "BENCH_trace.json"):
+    payload = {
+        "benchmark": "trace_replay",
+        "quick": quick,
+        "trace": bench_trace_summary(csv_rows, processes),
+        "tail_inflation": bench_tail_inflation(csv_rows, quick, processes),
+        "pareto": bench_pareto(csv_rows, quick, processes),
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        csv_rows.append(("trace/_json", 1, json_path))
+    return csv_rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller grid / fewer replicates (CI)")
+    ap.add_argument("--json", default="BENCH_trace.json")
+    ap.add_argument("--processes", type=int, default=None,
+                    help="0/1 inline; default cpu count (<=8)")
+    args = ap.parse_args()
+    rows = []
+    run(rows, quick=args.quick, processes=args.processes,
+        json_path=args.json)
+    print("name,value,derived")
+    for name, value, notes in rows:
+        print(f"{name},{value},{str(notes).replace(',', ';')}")
+
+
+if __name__ == "__main__":
+    main()

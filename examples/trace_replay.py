@@ -1,0 +1,90 @@
+"""Walkthrough: trace-driven fault replay (ISSUE 3 tentpole).
+
+Four steps:
+
+  1. load the bundled Lambda-like trace (digitized from arXiv
+     2105.07806) and look at its heavy cold-start/straggler tails;
+  2. resample one replayable ``FaultPlan`` from it — per-worker
+     cold-start extras + empirical straggler windows, a pure function
+     of (trace, seed);
+  3. run the event engine under that plan and compare against the
+     fault-free analytic epoch;
+  4. sweep one architecture under measured tails vs the synthetic
+     Poisson defaults and watch the p95 makespan split where the means
+     barely move — the reason trace replay exists.
+
+  PYTHONPATH=src python examples/trace_replay.py
+"""
+from repro.serverless import (EventSweepPoint, FaultPlan, FaultRates,
+                              ServerlessSetup, lambda_default,
+                              run_event_epoch, simulate_epoch,
+                              sweep_events)
+
+N_PARAMS = 4_200_000            # MobileNet
+COMP = 0.9                      # s per minibatch
+
+
+def main():
+    # ---- 1. the measured distributions --------------------------------
+    tr = lambda_default()
+    print(f"trace {tr.name!r}: {len(tr.cold_start_s)} cold-start samples, "
+          f"straggler_prob={tr.straggler_prob}")
+    for field in ("cold_start_s", "straggler_slowdown",
+                  "straggler_duration_s"):
+        lo, hi = tr.support(field)
+        print(f"  {field:22s} p50={tr.quantile(field, 0.5):6.1f} "
+              f"p95={tr.quantile(field, 0.95):6.1f} "
+              f"support=[{lo:g}, {hi:g}]")
+
+    # ---- 2. a replayable plan from (trace, seed) ----------------------
+    setup = ServerlessSetup()
+    base = simulate_epoch("allreduce", n_params=N_PARAMS,
+                          compute_s_per_batch=COMP, setup=setup)
+    plan = FaultPlan.from_trace(tr, seed=7, n_workers=setup.n_workers,
+                                horizon_s=base.per_worker_s,
+                                base_cold_start_s=setup.cold_start_s)
+    print("\nFaultPlan.from_trace(seed=7): per-worker cold-start extras "
+          f"= {[round(e, 1) for e in plan.cold_start_extra_s]} s")
+    for s in plan.stragglers:
+        print(f"  worker {s.worker} straggles x{s.slowdown:.1f} in "
+              f"[{s.start_s:.0f}s, {s.end_s:.0f}s]")
+    again = FaultPlan.from_trace(tr, seed=7, n_workers=setup.n_workers,
+                                 horizon_s=base.per_worker_s,
+                                 base_cold_start_s=setup.cold_start_s)
+    print(f"  replayable: identical plan from the same seed -> "
+          f"{plan == again}")
+
+    # ---- 3. the event engine replays the measured tails ---------------
+    rep = run_event_epoch("allreduce", n_params=N_PARAMS,
+                          compute_s_per_batch=COMP, setup=setup,
+                          faults=plan)
+    print(f"\nevent epoch under the trace: makespan {rep.makespan_s:.1f}s "
+          f"vs analytic {rep.analytic_s:.1f}s "
+          f"(+{100 * rep.overhead_vs_analytic:.1f}%), "
+          f"cost ${rep.total_cost:.4f}")
+
+    # ---- 4. measured tails vs Poisson, replicated ---------------------
+    point = [EventSweepPoint(arch="allreduce", n_params=N_PARAMS,
+                             compute_s_per_batch=COMP)]
+    reps = 12
+    traced = sweep_events(point, rates=FaultRates(crash_rate=0.1),
+                          trace=tr, n_replicates=reps, seed=42,
+                          processes=1)[0]
+    poisson = sweep_events(point, rates=FaultRates(
+        crash_rate=0.1, straggler_rate=tr.straggler_prob, storm_prob=0.3),
+        n_replicates=reps, seed=42, processes=1)[0]
+    print(f"\nallreduce, {reps} replicates each:")
+    print(f"  {'':10s}{'p50 s':>9s}{'p95 s':>9s}{'p95/p50':>9s}"
+          f"{'cost $':>9s}")
+    for name, s in (("measured", traced), ("poisson", poisson)):
+        print(f"  {name:10s}{s.makespan_p50_s:9.1f}{s.makespan_p95_s:9.1f}"
+              f"{s.makespan_p95_s / s.makespan_p50_s:9.2f}"
+              f"{s.cost_mean:9.4f}")
+    print("\nReading it: both arms crash at the same rate (shared crash "
+          "sub-stream),\nbut the measured cold-start/straggler tails fatten "
+          "the p95 — the synthetic\ndefaults understate exactly the risk a "
+          "fleet operator provisions for.")
+
+
+if __name__ == "__main__":
+    main()

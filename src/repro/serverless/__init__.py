@@ -17,6 +17,9 @@ from repro.serverless.recovery import (  # noqa: F401
 from repro.serverless.autoscale import (  # noqa: F401
     ReactiveAutoscaler, ScheduledScaler,
 )
+from repro.serverless.traces import (  # noqa: F401
+    LAMBDA_2105_07806, Trace, lambda_default,
+)
 from repro.serverless.sweep import (  # noqa: F401
     AnalyticSweep, EventPointStats, EventSweepPoint, FaultRates, SweepGrid,
     iter_grid, pareto_front, ram_scaled_compute, scalar_sweep,

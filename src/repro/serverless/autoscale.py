@@ -69,8 +69,10 @@ class ReactiveAutoscaler:
                                     1e-9))
         # reference round time: the plan's fault-free ideal when the
         # runtime provides it (catches a from-the-start straggler the
-        # EMA would normalize away), else the trailing EMA
-        ref = ideal_round_s if ideal_round_s else prev_ema
+        # EMA would normalize away), else the trailing EMA.  `is not
+        # None`, not truthiness: a legitimate 0.0 ideal must not fall
+        # back to the EMA and mute the scale-out signal
+        ref = ideal_round_s if ideal_round_s is not None else prev_ema
         # scale OUT: this round was anomalously slow and there is enough
         # remaining work to amortize a cold start
         if (ref is not None and round_s > self.scale_out_ratio * ref

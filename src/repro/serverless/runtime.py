@@ -214,7 +214,10 @@ class EventRuntime:
             w.alive, w.state = True, COLD_START
         w.spawn_time = t if existing is None else w.spawn_time
         w.replay_rounds = replay_rounds
-        cold = self.plan.cold_start_s
+        # heterogeneous cold starts: the trace-replay per-worker vector
+        # (every (re-)invocation of a worker id re-pays its extra, like
+        # a storm victim re-pays the storm's) on top of the storm
+        cold = self.plan.cold_start_s + self.faults.cold_extra(w.id)
         if w.id in self._storm_victims:
             cold += self.faults.storm.extra_s
         if self._tl:

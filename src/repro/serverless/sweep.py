@@ -19,9 +19,10 @@ of times.  This module provides the three performance layers:
   2. **Seeded multi-replicate event sweep** — :func:`sweep_events` fans
      fault-injected :func:`~repro.serverless.runtime.run_event_epoch`
      grid points across processes, drawing one reproducible
-     :meth:`FaultPlan.random` per (point, replicate) seed, and
-     aggregates mean / p50 / p95 time-to-recover, makespan and cost
-     overhead per point.
+     :meth:`FaultPlan.random` per (point, replicate) seed — or, with
+     ``trace=``, one :meth:`FaultPlan.from_trace` replaying measured
+     cold-start/straggler tails — and aggregates mean / p50 / p95
+     time-to-recover, makespan and cost overhead per point.
 
   3. **Pareto extraction** — :func:`pareto_front` returns the
      non-dominated (cost, makespan) subset, which
@@ -45,6 +46,7 @@ from repro.serverless.autoscale import ReactiveAutoscaler
 from repro.serverless.faults import FaultPlan
 from repro.serverless.recovery import CheckpointRestore, PeerTakeover
 from repro.serverless.runtime import RuntimeReport, run_event_epoch
+from repro.serverless.traces import Trace
 from repro.serverless.simulator import (ARCHS, REDIS, Channel,
                                         ServerlessSetup, _epoch_cost,
                                         _epoch_terms, _round_terms,
@@ -294,7 +296,11 @@ class EventSweepPoint:
     architecture and checkpoint-restore for everything else (the
     pairing ``benchmarks/fault_tolerance.py`` measures);
     ``autoscale_max > 0`` attaches a :class:`ReactiveAutoscaler` with
-    the given bounds.
+    the given bounds.  A non-``None`` ``trace`` replays measured
+    cold-start/straggler tails via :meth:`FaultPlan.from_trace` instead
+    of the Poisson ``FaultRates`` draws (crash/byzantine rates still
+    apply — they are not part of the measured trace); it overrides any
+    sweep-level trace passed to :func:`sweep_events`.
     """
     arch: str
     n_params: int
@@ -307,6 +313,7 @@ class EventSweepPoint:
     autoscale_min: int = 1
     autoscale_max: int = 0             # 0 => fixed fleet
     robust_trim: int = 0
+    trace: Optional[Trace] = None
     label: str = ""
 
 
@@ -344,13 +351,35 @@ def _resolve_recovery(point: EventSweepPoint):
 
 
 def run_point_replicate(point: EventSweepPoint, rates: FaultRates,
-                        seed: int, horizon_s: float) -> RuntimeReport:
-    """One seeded fault-injected epoch of one sweep point."""
-    faults = FaultPlan.random(
-        seed=seed, n_workers=point.setup.n_workers, horizon_s=horizon_s,
-        crash_rate=rates.crash_rate, straggler_rate=rates.straggler_rate,
-        byzantine_fraction=rates.byzantine_fraction,
-        storm_prob=rates.storm_prob)
+                        seed: int, horizon_s: float,
+                        trace: Optional[Trace] = None) -> RuntimeReport:
+    """One seeded fault-injected epoch of one sweep point.  With a
+    trace (per-point beats sweep-level), cold-start/straggler behaviour
+    is resampled from the measured distributions instead of the Poisson
+    rates."""
+    trace = point.trace if point.trace is not None else trace
+    if trace is not None:
+        faults = FaultPlan.from_trace(
+            trace, seed=seed, n_workers=point.setup.n_workers,
+            horizon_s=horizon_s,
+            base_cold_start_s=point.setup.cold_start_s,
+            crash_rate=rates.crash_rate,
+            byzantine_fraction=rates.byzantine_fraction,
+            # autoscaled joiners must pay measured cold starts too.
+            # Worker ids are never reused, so budget draws for the worst
+            # churn case: the ReactiveAutoscaler adds at most `step` (1)
+            # per barrier and there are ~batches_per_worker barriers per
+            # epoch, so cumulative joiners cannot reach the budget
+            n_spare_workers=(point.autoscale_max
+                             + point.setup.batches_per_worker
+                             if point.autoscale_max > 0 else 0))
+    else:
+        faults = FaultPlan.random(
+            seed=seed, n_workers=point.setup.n_workers,
+            horizon_s=horizon_s, crash_rate=rates.crash_rate,
+            straggler_rate=rates.straggler_rate,
+            byzantine_fraction=rates.byzantine_fraction,
+            storm_prob=rates.storm_prob)
     autoscaler = (ReactiveAutoscaler(min_workers=point.autoscale_min,
                                      max_workers=point.autoscale_max)
                   if point.autoscale_max > 0 else None)
@@ -366,10 +395,10 @@ def run_point_replicate(point: EventSweepPoint, rates: FaultRates,
 def _run_point_job(job) -> List[Tuple[float, float, float]]:
     """Worker-process entry: all replicates of one point.  Module-level
     so it pickles under ProcessPoolExecutor."""
-    point, rates, seeds, horizon_s, base_makespan = job
+    point, rates, seeds, horizon_s, base_makespan, trace = job
     out = []
     for s in seeds:
-        rep = run_point_replicate(point, rates, s, horizon_s)
+        rep = run_point_replicate(point, rates, s, horizon_s, trace=trace)
         ttr = (rep.time_to_recover_s if rep.recoveries
                else max(rep.makespan_s - base_makespan, 0.0))
         out.append((rep.makespan_s, rep.total_cost, ttr))
@@ -379,11 +408,16 @@ def _run_point_job(job) -> List[Tuple[float, float, float]]:
 def sweep_events(points: Sequence[EventSweepPoint], *,
                  rates: FaultRates = FaultRates(),
                  n_replicates: int = 8, seed: int = 0,
-                 processes: Optional[int] = None) -> List[EventPointStats]:
+                 processes: Optional[int] = None,
+                 trace: Optional[Trace] = None) -> List[EventPointStats]:
     """Replicate every point ``n_replicates`` times under seeded random
     faults, fanning points across ``processes`` worker processes
     (default: cpu count, capped at 8; pass 0/1 to run inline), and
     aggregate mean/p50/p95 makespan, time-to-recover and cost overhead.
+    A ``trace`` switches every point (unless the point carries its own)
+    from Poisson rate draws to trace-driven replay of measured
+    cold-start/straggler tails — same seeding discipline, so results
+    stay bit-reproducible from (points, trace, seed).
     """
     jobs = []
     bases = []
@@ -395,7 +429,8 @@ def sweep_events(points: Sequence[EventSweepPoint], *,
                               accumulation=p.accumulation)
         seeds = tuple(_replicate_seed(seed, i, r)
                       for r in range(n_replicates))
-        jobs.append((p, rates, seeds, base.per_worker_s, base.per_worker_s))
+        jobs.append((p, rates, seeds, base.per_worker_s, base.per_worker_s,
+                     trace))
         bases.append(base)
     if processes is None:
         processes = min(os.cpu_count() or 1, 8)

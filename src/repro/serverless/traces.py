@@ -1,0 +1,185 @@
+"""Empirical fault traces: measured cold-start / straggler tails.
+
+The synthetic :meth:`FaultPlan.random` draws Poisson-thinned events with
+uniform magnitudes, but the serverless-training literature the paper
+builds on measures *heavy* tails: Towards Demystifying Serverless
+Machine Learning Training (arXiv 2105.07806) reports cold-start
+latencies whose p95 is an order of magnitude above the median once the
+deployment package carries an ML runtime, and straggler slowdowns with
+a long right tail from noisy-neighbour vCPU throttling.  This module is
+the trace-driven replay subsystem the ROADMAP queued: a :class:`Trace`
+holds empirical samples of those distributions, and
+:meth:`repro.serverless.faults.FaultPlan.from_trace` resamples them
+into replayable per-worker fault plans via inverse CDF over seeded
+sub-streams, so every (trace, seed) pair is bit-reproducible.
+
+Trace schema
+------------
+JSON — one object with the three sample arrays plus the per-epoch
+straggler occurrence probability::
+
+    {
+      "name": "lambda-2105.07806",
+      "straggler_prob": 0.12,
+      "cold_start_s": [1.7, 1.9, ...],        # absolute seconds
+      "straggler_slowdown": [1.3, 1.5, ...],  # multiplicative, >= 1
+      "straggler_duration_s": [4.0, 6.0, ...] # window length, seconds
+    }
+
+CSV — long format with header ``field,value``; one row per sample, the
+``field`` column naming one of the three arrays above, plus a single
+``straggler_prob`` row::
+
+    field,value
+    cold_start_s,1.7
+    cold_start_s,1.9
+    straggler_slowdown,1.3
+    straggler_duration_s,4.0
+    straggler_prob,0.12
+
+Semantics: ``cold_start_s`` samples are *absolute* measured cold-start
+latencies (a worker's extra over the simulator's plan-level base is
+``max(0, sample - base)``, resolved by ``FaultPlan.from_trace`` so the
+base is never double counted); ``straggler_slowdown`` multiplies
+compute time inside a window whose length is drawn from
+``straggler_duration_s``; ``straggler_prob`` is the probability that a
+given worker straggles at all during one epoch.
+
+Bundled default
+---------------
+:func:`lambda_default` ships a Lambda-like trace digitized from the
+measurements reported in arXiv 2105.07806 (cold-start §5.2 /
+communication-straggler discussion): ~2 s warm-package median cold
+start with a heavy right tail to ~30 s (large ML deployment packages +
+concurrent-invocation bursts), straggler slowdowns 1.3-7.5x with
+minutes-long windows, ~12% of workers straggling per epoch.  The
+digitization is a quantile-grid approximation of the published curves,
+not a copy of raw data — it exists so the Pareto benchmarks can compare
+measured-tail behaviour against the synthetic Poisson defaults without
+network access.
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import json
+import math
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+_FIELDS = ("cold_start_s", "straggler_slowdown", "straggler_duration_s")
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    """Empirical distributions for trace-driven fault replay.
+
+    Samples are stored sorted (the inverse CDF is then a single index),
+    as plain float tuples so a ``Trace`` hashes, compares, and pickles
+    across the sweep engine's spawned worker processes.
+    """
+    cold_start_s: Tuple[float, ...]
+    straggler_slowdown: Tuple[float, ...] = ()
+    straggler_duration_s: Tuple[float, ...] = ()
+    straggler_prob: float = 0.0
+    name: str = "custom"
+
+    def __post_init__(self):
+        for field in _FIELDS:
+            vals = tuple(sorted(float(v) for v in getattr(self, field)))
+            if any(not math.isfinite(v) or v < 0 for v in vals):
+                raise ValueError(f"{field}: samples must be finite and "
+                                 f">= 0, got {vals}")
+            object.__setattr__(self, field, vals)
+        if not self.cold_start_s:
+            raise ValueError("cold_start_s needs at least one sample")
+        if not 0.0 <= self.straggler_prob <= 1.0:
+            raise ValueError(f"straggler_prob must be a probability, "
+                             f"got {self.straggler_prob}")
+        if self.straggler_prob > 0:
+            if not (self.straggler_slowdown and self.straggler_duration_s):
+                raise ValueError("straggler_prob > 0 needs slowdown and "
+                                 "duration samples")
+            if self.straggler_slowdown[0] < 1.0:
+                raise ValueError("straggler slowdowns are multiplicative "
+                                 "and must be >= 1")
+
+    # ---------------------------------------------------------- sampling
+    def sample(self, field: str, u):
+        """Inverse empirical CDF: map uniforms ``u`` in [0, 1) to
+        observed samples (pure bootstrap — no interpolation, so every
+        resampled value is a member of the trace's support)."""
+        if field not in _FIELDS:
+            raise KeyError(field)
+        s = np.asarray(getattr(self, field), float)   # sorted tuple
+        if s.size == 0:
+            raise ValueError(f"trace {self.name!r}: no {field} samples")
+        # clip both ends: u < 0 must not wrap to the top of the
+        # distribution through negative indexing
+        idx = np.clip((np.asarray(u) * s.size).astype(int), 0, s.size - 1)
+        return s[idx]
+
+    def support(self, field: str) -> Tuple[float, float]:
+        vals = getattr(self, field)
+        return (vals[0], vals[-1])
+
+    def quantile(self, field: str, q: float) -> float:
+        return float(self.sample(field, q))
+
+    # ---------------------------------------------------------- file I/O
+    def to_json(self, path: str) -> None:
+        payload = dict(name=self.name, straggler_prob=self.straggler_prob,
+                       **{f: list(getattr(self, f)) for f in _FIELDS})
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+
+    @classmethod
+    def from_json(cls, path: str) -> "Trace":
+        with open(path) as f:
+            payload = json.load(f)
+        unknown = set(payload) - set(_FIELDS) - {"name", "straggler_prob"}
+        if unknown:
+            raise ValueError(f"unknown trace fields: {sorted(unknown)}")
+        return cls(**payload)
+
+    @classmethod
+    def from_csv(cls, path: str, *, name: Optional[str] = None) -> "Trace":
+        """Long-format ``field,value`` CSV (see module docstring)."""
+        fields = {f: [] for f in _FIELDS}
+        prob = 0.0
+        with open(path) as f:
+            for row in csv.DictReader(f):
+                key, val = row["field"], float(row["value"])
+                if key == "straggler_prob":
+                    prob = val
+                elif key in fields:
+                    fields[key].append(val)
+                else:
+                    raise ValueError(f"unknown trace field {key!r}")
+        return cls(name=name or path, straggler_prob=prob,
+                   **{k: tuple(v) for k, v in fields.items()})
+
+
+# ---------------------------------------------------------------------------
+# Bundled Lambda-like default (see module docstring for provenance)
+# ---------------------------------------------------------------------------
+_LAMBDA_COLD_START_S = (
+    1.7, 1.9, 2.0, 2.1, 2.2, 2.3, 2.4, 2.5, 2.6, 2.8,
+    3.0, 3.3, 3.7, 4.2, 5.0, 6.3, 8.5, 12.0, 19.0, 31.0)
+_LAMBDA_STRAGGLER_SLOWDOWN = (
+    1.3, 1.5, 1.7, 1.9, 2.2, 2.6, 3.2, 4.1, 5.5, 7.5)
+_LAMBDA_STRAGGLER_DURATION_S = (
+    4.0, 6.0, 8.0, 11.0, 15.0, 21.0, 30.0, 45.0, 70.0, 110.0)
+
+LAMBDA_2105_07806 = Trace(
+    name="lambda-2105.07806",
+    cold_start_s=_LAMBDA_COLD_START_S,
+    straggler_slowdown=_LAMBDA_STRAGGLER_SLOWDOWN,
+    straggler_duration_s=_LAMBDA_STRAGGLER_DURATION_S,
+    straggler_prob=0.12)
+
+
+def lambda_default() -> Trace:
+    """The bundled Lambda-like trace digitized from arXiv 2105.07806."""
+    return LAMBDA_2105_07806

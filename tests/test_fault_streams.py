@@ -1,0 +1,154 @@
+"""Regression tests for the ISSUE 3 satellite bugfixes: correlated
+fault-class RNG streams, the storm-victim count clamp, and the
+autoscaler's falsy ideal-round reference.
+"""
+import numpy as np
+import pytest
+
+from repro.serverless import (ColdStartStorm, FaultPlan,
+                              ReactiveAutoscaler, ServerlessSetup,
+                              run_event_epoch)
+
+N_PARAMS = int(4.2e6)
+COMP = 0.9
+
+
+# ------------------------------------------------- disjoint sub-streams
+def test_crash_draws_independent_of_straggler_rate():
+    """Per-class sub-streams: raising the straggler rate must not shift
+    crash times (the old single-stream draw interleaved them, so a
+    triggered straggler consumed uniforms the next crash needed)."""
+    for seed in range(10):
+        plans = [FaultPlan.random(seed=seed, n_workers=8, horizon_s=100.0,
+                                  crash_rate=0.5, straggler_rate=r)
+                 for r in (0.0, 0.5, 1.0)]
+        assert plans[0].crashes == plans[1].crashes == plans[2].crashes
+        # and symmetrically: stragglers survive a crash-rate change
+        a = FaultPlan.random(seed=seed, n_workers=8, horizon_s=100.0,
+                             crash_rate=0.0, straggler_rate=0.5)
+        b = FaultPlan.random(seed=seed, n_workers=8, horizon_s=100.0,
+                             crash_rate=1.0, straggler_rate=0.5)
+        assert a.stragglers == b.stragglers
+
+
+def test_storm_victims_left_the_shared_random_state_stream():
+    """The bug: ``storm_victims`` re-seeded ``RandomState(seed)`` — the
+    very stream ``FaultPlan.random`` consumed for crash draws — so
+    victims replayed the crash uniforms.  The fix derives a dedicated
+    sub-stream; victims must therefore differ from the old shared-stream
+    draw for at least some seeds."""
+    def old_victims(seed, fraction, n):
+        rng = np.random.RandomState(seed)
+        k = max(1, int(round(fraction * n)))
+        return tuple(sorted(rng.choice(n, size=k, replace=False)))
+
+    plans = [FaultPlan(storm=ColdStartStorm(fraction=0.5), seed=s)
+             for s in range(20)]
+    assert any(p.storm_victims(8) != old_victims(p.seed, 0.5, 8)
+               for p in plans)
+    # still seeded: same (seed, fleet) -> same victims
+    for p in plans:
+        assert p.storm_victims(8) == p.storm_victims(8)
+
+
+def test_storm_victims_statistically_decorrelated_from_crashes():
+    """Joint frequency of (worker crashed, worker is a victim) must sit
+    at the product of the marginals — the correlation the shared stream
+    used to inject."""
+    n, crashed_and_victim, crashed, victim, total = 16, 0, 0, 0, 0
+    for seed in range(300):
+        p = FaultPlan.random(seed=seed, n_workers=n, horizon_s=100.0,
+                             crash_rate=0.5, storm_prob=1.0)
+        victims = set(p.storm_victims(n))
+        crashes = {c.worker for c in p.crashes}
+        for w in range(n):
+            total += 1
+            crashed += w in crashes
+            victim += w in victims
+            crashed_and_victim += (w in crashes) and (w in victims)
+    joint = crashed_and_victim / total
+    product = (crashed / total) * (victim / total)
+    # 4800 draws: |joint - product| ~ N(0, 0.0063); 0.04 is >6 sigma
+    assert abs(joint - product) < 0.04, (joint, product)
+
+
+# --------------------------------------------------- storm-victim clamp
+def test_storm_fraction_zero_hits_nobody():
+    plan = FaultPlan(storm=ColdStartStorm(extra_s=8.0, fraction=0.0),
+                     seed=3)
+    assert plan.storm_victims(4) == ()
+    base = run_event_epoch("allreduce", n_params=N_PARAMS,
+                           compute_s_per_batch=COMP,
+                           setup=ServerlessSetup())
+    rep = run_event_epoch("allreduce", n_params=N_PARAMS,
+                          compute_s_per_batch=COMP,
+                          setup=ServerlessSetup(), faults=plan)
+    assert rep.makespan_s == base.makespan_s       # a 0-fraction storm is free
+
+
+def test_storm_fraction_above_one_clamps_to_fleet():
+    plan = FaultPlan(storm=ColdStartStorm(fraction=1.5), seed=3)
+    assert plan.storm_victims(4) == (0, 1, 2, 3)   # no crash, whole fleet
+    assert plan.storm_victims(1) == (0,)
+
+
+def test_byzantine_fraction_clamps_like_storm_fraction():
+    full = FaultPlan.random(seed=1, n_workers=4, horizon_s=100.0,
+                            byzantine_fraction=1.2)
+    assert full.byzantine_workers() == (0, 1, 2, 3)
+    none = FaultPlan.random(seed=1, n_workers=4, horizon_s=100.0,
+                            byzantine_fraction=-0.5)
+    assert none.byzantine == ()
+
+
+def test_storm_fraction_rounds_to_nearest_count():
+    plan = FaultPlan(storm=ColdStartStorm(fraction=0.5), seed=9)
+    assert len(plan.storm_victims(4)) == 2
+    assert len(plan.storm_victims(5)) == 2          # round(2.5) banker's
+    assert len(plan.storm_victims(100)) == 50
+
+
+# ------------------------------------------- autoscaler falsy reference
+def _prime(scaler, round_s=10.0, workers=4):
+    """Feed round 1 (ignored: embeds the cold start) so the EMA exists."""
+    scaler.observe(round_idx=1, now_s=round_s, active_workers=workers,
+                   remaining_batches=960.0, batches_per_round=1.0,
+                   ideal_round_s=None)
+
+
+def test_autoscaler_zero_ideal_round_still_scales_out():
+    """The bug: ``ideal_round_s=0.0`` is falsy, so the reference fell
+    back to the EMA and a permanently-slow fleet (every round equals the
+    EMA) never scaled.  With ``is not None``, any positive round beats a
+    zero ideal."""
+    a = ReactiveAutoscaler(max_workers=8)
+    _prime(a)
+    delta = a.observe(round_idx=2, now_s=20.0, active_workers=4,
+                      remaining_batches=800.0, batches_per_round=1.0,
+                      ideal_round_s=0.0)
+    assert delta == 1
+    assert a.decisions and a.decisions[-1][1] == 1
+
+
+def test_autoscaler_near_zero_ideal_round_scales_out():
+    a = ReactiveAutoscaler(max_workers=8)
+    _prime(a)
+    assert a.observe(round_idx=2, now_s=20.0, active_workers=4,
+                     remaining_batches=800.0, batches_per_round=1.0,
+                     ideal_round_s=1e-9) == 1
+
+
+def test_autoscaler_none_ideal_still_uses_ema():
+    """No reference provided -> trailing EMA, as before the fix: a round
+    matching the EMA is not anomalous and must not scale out."""
+    a = ReactiveAutoscaler(max_workers=8)
+    _prime(a)
+    assert a.observe(round_idx=2, now_s=20.0, active_workers=4,
+                     remaining_batches=800.0, batches_per_round=1.0,
+                     ideal_round_s=None) == 0
+    # but a blowout vs the EMA still triggers
+    b = ReactiveAutoscaler(max_workers=8)
+    _prime(b)
+    assert b.observe(round_idx=2, now_s=10.0 + 50.0, active_workers=4,
+                     remaining_batches=800.0, batches_per_round=1.0,
+                     ideal_round_s=None) == 1

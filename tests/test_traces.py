@@ -1,0 +1,269 @@
+"""Trace-driven fault replay: the empirical-distribution container,
+``FaultPlan.from_trace`` resampling, per-worker cold starts in the
+event runtime, and the ``sweep_events(trace=...)`` wiring.
+
+The contract under test is the ISSUE 3 tentpole's: every (trace, seed)
+pair is bit-replayable, resampled values never leave the empirical
+support, and the per-worker cold-start vector degenerates to the
+scalar path when the trace has a single sample.
+"""
+import dataclasses
+
+import pytest
+
+from repro.serverless import (EventSweepPoint, FaultPlan, FaultRates,
+                              ServerlessSetup, Trace, lambda_default,
+                              run_event_epoch, sweep_events)
+
+N_PARAMS = int(4.2e6)
+COMP = 0.9
+HORIZON = 120.0
+
+
+def _trace(**kw):
+    base = dict(name="t", cold_start_s=(2.0, 4.0, 9.0, 30.0),
+                straggler_slowdown=(1.5, 3.0, 6.0),
+                straggler_duration_s=(5.0, 20.0, 60.0),
+                straggler_prob=0.5)
+    base.update(kw)
+    return Trace(**base)
+
+
+# ---------------------------------------------------------------- Trace
+def test_trace_samples_stored_sorted_and_validated():
+    tr = Trace(cold_start_s=(9.0, 2.0, 4.0))
+    assert tr.cold_start_s == (2.0, 4.0, 9.0)
+    assert tr.support("cold_start_s") == (2.0, 9.0)
+    with pytest.raises(ValueError):
+        Trace(cold_start_s=())
+    with pytest.raises(ValueError):
+        Trace(cold_start_s=(2.0,), straggler_prob=1.5)
+    with pytest.raises(ValueError):                  # prob>0 needs samples
+        Trace(cold_start_s=(2.0,), straggler_prob=0.2)
+    with pytest.raises(ValueError):                  # slowdown < 1
+        _trace(straggler_slowdown=(0.5, 2.0))
+
+
+def test_trace_json_roundtrip(tmp_path):
+    tr = _trace()
+    path = str(tmp_path / "trace.json")
+    tr.to_json(path)
+    assert Trace.from_json(path) == tr
+
+
+def test_trace_csv_load(tmp_path):
+    path = tmp_path / "trace.csv"
+    path.write_text("field,value\n"
+                    "cold_start_s,2.0\ncold_start_s,9.0\n"
+                    "straggler_slowdown,3.0\n"
+                    "straggler_duration_s,20.0\n"
+                    "straggler_prob,0.25\n")
+    tr = Trace.from_csv(str(path), name="csv")
+    assert tr.cold_start_s == (2.0, 9.0)
+    assert tr.straggler_prob == 0.25
+    bad = tmp_path / "bad.csv"
+    bad.write_text("field,value\nwarm_start_s,1.0\n")
+    with pytest.raises(ValueError):
+        Trace.from_csv(str(bad))
+
+
+def test_inverse_cdf_stays_in_support():
+    """Bootstrap resampling: every value is a member of the sample set."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    tr = _trace()
+
+    @hyp.settings(max_examples=50, deadline=None)
+    @hyp.given(st.lists(st.floats(0.0, 1.0, exclude_max=True),
+                        min_size=1, max_size=32))
+    def prop(us):
+        for field in ("cold_start_s", "straggler_slowdown",
+                      "straggler_duration_s"):
+            vals = tr.sample(field, us)
+            assert all(v in getattr(tr, field) for v in vals)
+
+    prop()
+
+
+def test_inverse_cdf_clamps_out_of_range_u():
+    """u outside [0, 1) must clamp to the distribution's ends — a
+    negative u must not wrap to the maximum via negative indexing."""
+    tr = _trace()
+    assert float(tr.sample("cold_start_s", -0.05)) == tr.cold_start_s[0]
+    assert float(tr.sample("cold_start_s", 1.0)) == tr.cold_start_s[-1]
+    assert tr.quantile("cold_start_s", -1.0) == tr.cold_start_s[0]
+
+
+def test_bundled_default_trace_is_heavy_tailed():
+    tr = lambda_default()
+    assert tr.name == "lambda-2105.07806"
+    # the tail the Poisson defaults miss: p95 far above the median
+    assert tr.quantile("cold_start_s", 0.95) \
+        > 3 * tr.quantile("cold_start_s", 0.5)
+    assert 0 < tr.straggler_prob < 1
+    assert tr.straggler_slowdown[0] >= 1.0
+
+
+# ---------------------------------------------------- FaultPlan.from_trace
+def _plan(seed=3, n_workers=4, trace=None, **kw):
+    return FaultPlan.from_trace(trace or _trace(), seed=seed,
+                                n_workers=n_workers, horizon_s=HORIZON,
+                                **kw)
+
+
+def test_from_trace_deterministic_from_trace_and_seed():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=30, deadline=None)
+    @hyp.given(seed=st.integers(0, 2**31), n_workers=st.integers(1, 16))
+    def prop(seed, n_workers):
+        assert _plan(seed, n_workers) == _plan(seed, n_workers)
+
+    prop()
+    assert any(_plan(s) != _plan(s + 1) for s in range(8))
+
+
+def test_from_trace_values_stay_in_empirical_support():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    tr = _trace()
+
+    @hyp.settings(max_examples=30, deadline=None)
+    @hyp.given(seed=st.integers(0, 2**31),
+               base=st.floats(0.0, 5.0, allow_nan=False))
+    def prop(seed, base):
+        plan = _plan(seed, 8, base_cold_start_s=base)
+        assert len(plan.cold_start_extra_s) == 8
+        lo, hi = tr.support("cold_start_s")
+        for e in plan.cold_start_extra_s:
+            assert 0.0 <= e <= hi - min(base, lo) + 1e-12
+            assert e == 0.0 or any(abs(e + base - c) < 1e-9
+                                   for c in tr.cold_start_s)
+        for s in plan.stragglers:
+            assert s.slowdown in tr.straggler_slowdown
+            # (t0 + dur) - t0 wobbles in the last ulp; membership up to
+            # rounding
+            assert any(abs((s.end_s - s.start_s) - d) < 1e-9
+                       for d in tr.straggler_duration_s)
+            assert 0.0 <= s.start_s and s.end_s <= HORIZON + 1e-9
+        assert plan.storm is None
+
+    prop()
+
+
+def test_from_trace_per_worker_draws_do_not_interfere():
+    """Fixed draws per worker: worker w's cold start and straggler
+    window are identical whatever the fleet size."""
+    small, big = _plan(11, 4), _plan(11, 9)
+    assert big.cold_start_extra_s[:4] == small.cold_start_extra_s
+    by_w = {s.worker: s for s in big.stragglers}
+    for s in small.stragglers:
+        assert by_w[s.worker] == s
+
+
+def test_from_trace_spare_workers_extend_cold_vector_stably():
+    """Autoscaled joiners draw measured cold starts too: spares append
+    to the vector without disturbing the initial fleet's extras or any
+    other fault class."""
+    plain = _plan(11, 4)
+    spared = _plan(11, 4, n_spare_workers=5)
+    assert len(spared.cold_start_extra_s) == 9
+    assert spared.cold_start_extra_s[:4] == plain.cold_start_extra_s
+    assert spared.stragglers == plain.stragglers
+    assert spared.crashes == plain.crashes
+
+
+def test_from_trace_crash_stream_shared_with_random():
+    """Crashes ride the same sub-stream as FaultPlan.random's, so the
+    traced and Poisson sweep arms differ only in tail behaviour."""
+    traced = _plan(5, 8, crash_rate=0.5)
+    synth = FaultPlan.random(seed=5, n_workers=8, horizon_s=HORIZON,
+                             crash_rate=0.5)
+    assert traced.crashes == synth.crashes
+
+
+# --------------------------------------- per-worker cold starts, runtime
+def test_degenerate_one_sample_trace_reduces_to_scalar_path():
+    """A single-sample cold-start trace gives every worker the same
+    extra; the event epoch must equal one run with the scalar
+    plan-level cold start bumped by that extra."""
+    tr = Trace(cold_start_s=(10.5,), name="degenerate")
+    setup = ServerlessSetup(cold_start_s=2.5)
+    plan = FaultPlan.from_trace(tr, seed=0, n_workers=setup.n_workers,
+                                horizon_s=HORIZON,
+                                base_cold_start_s=setup.cold_start_s)
+    assert plan.cold_start_extra_s == (8.0,) * setup.n_workers
+    a = run_event_epoch("allreduce", n_params=N_PARAMS,
+                        compute_s_per_batch=COMP, setup=setup,
+                        faults=plan)
+    b = run_event_epoch("allreduce", n_params=N_PARAMS,
+                        compute_s_per_batch=COMP,
+                        setup=dataclasses.replace(setup, cold_start_s=10.5))
+    for field in ("makespan_s", "rounds", "work_done_batches",
+                  "total_cost", "stage_totals"):
+        assert getattr(a, field) == getattr(b, field), field
+
+
+def test_per_worker_cold_extras_gate_first_barrier():
+    """The slowest empirical cold start gates the synchronous fleet,
+    exactly like a storm victim's scalar extra_s does."""
+    base = run_event_epoch("allreduce", n_params=N_PARAMS,
+                           compute_s_per_batch=COMP,
+                           setup=ServerlessSetup())
+    plan = FaultPlan(cold_start_extra_s=(0.0, 3.0, 27.5, 1.0))
+    rep = run_event_epoch("allreduce", n_params=N_PARAMS,
+                          compute_s_per_batch=COMP,
+                          setup=ServerlessSetup(), faults=plan)
+    assert rep.makespan_s == pytest.approx(base.makespan_s + 27.5,
+                                           rel=1e-9)
+    assert rep.stage_totals["cold_start"] == pytest.approx(
+        base.stage_totals["cold_start"] + 31.5, rel=1e-9)
+
+
+# ----------------------------------------------------- sweep integration
+def _points(trace=None):
+    return [EventSweepPoint(arch="allreduce", n_params=N_PARAMS,
+                            compute_s_per_batch=COMP, trace=trace),
+            EventSweepPoint(arch="spirt", n_params=N_PARAMS,
+                            compute_s_per_batch=COMP, trace=trace)]
+
+
+def test_sweep_events_trace_spawn_matches_inline():
+    """Satellite: spawn-vs-inline agreement with trace= set — the
+    sweep's fan-out must not perturb trace-driven draws."""
+    kw = dict(rates=FaultRates(crash_rate=0.3), trace=_trace(),
+              n_replicates=2, seed=3)
+    inline = sweep_events(_points(), processes=1, **kw)
+    fanned = sweep_events(_points(), processes=2, **kw)
+    for x, y in zip(inline, fanned):
+        assert x.makespan_mean_s == y.makespan_mean_s
+        assert x.cost_mean == y.cost_mean
+        assert x.ttr_mean_s == y.ttr_mean_s
+
+
+def test_sweep_events_trace_is_seeded_and_changes_results():
+    pts = _points()
+    kw = dict(rates=FaultRates(), n_replicates=3, processes=1)
+    a = sweep_events(pts, trace=_trace(), seed=7, **kw)
+    b = sweep_events(pts, trace=_trace(), seed=7, **kw)
+    plain = sweep_events(pts, seed=7, **kw)
+    for x, y in zip(a, b):
+        assert x.makespan_mean_s == y.makespan_mean_s
+        assert x.cost_overhead_p95 == y.cost_overhead_p95
+    # measured cold-start tails actually bite: traced != rate-free runs
+    assert all(x.makespan_mean_s > p.makespan_mean_s
+               for x, p in zip(a, plain))
+
+
+def test_sweep_events_per_point_trace_overrides_sweep_level():
+    heavy = _trace(cold_start_s=(200.0,), straggler_prob=0.0)
+    light = _trace(cold_start_s=(3.0,), straggler_prob=0.0)
+    pts = [EventSweepPoint(arch="allreduce", n_params=N_PARAMS,
+                           compute_s_per_batch=COMP, trace=heavy),
+           EventSweepPoint(arch="allreduce", n_params=N_PARAMS,
+                           compute_s_per_batch=COMP)]
+    stats = sweep_events(pts, rates=FaultRates(), trace=light,
+                         n_replicates=2, seed=0, processes=1)
+    # point 0's own heavy trace wins over the light sweep-level default
+    assert stats[0].makespan_mean_s > stats[1].makespan_mean_s + 100.0
