@@ -27,10 +27,10 @@ Usage: PYTHONPATH=src python -m benchmarks.run --only fault_tolerance
 from __future__ import annotations
 
 from repro.launch import byzantine_train
-from repro.serverless import (CheckpointRestore, ColdStartStorm, FaultPlan,
-                              PeerTakeover, ReactiveAutoscaler,
-                              ServerlessSetup, Straggler, WorkerCrash,
-                              ByzantineWorker, run_event_epoch,
+from repro.serverless import (ColdStartStorm, FaultPlan,
+                              ReactiveAutoscaler, ServerlessSetup,
+                              Straggler, WorkerCrash, ByzantineWorker,
+                              default_recovery, run_event_epoch,
                               simulate_epoch)
 from repro.serverless.simulator import (ARCHS,
                                         paper_compute_anchor
@@ -68,10 +68,10 @@ def run(csv_rows):
                 storm=ColdStartStorm(extra_s=8.0, fraction=0.5), seed=7),
         }
         for fname, plan in faults.items():
-            # SPIRT recovers via in-DB peer takeover; everyone else must
+            # each spec names its own recovery design: in-DB archs
+            # (SPIRT family) take over from peers, everyone else must
             # re-invoke and replay from a checkpoint
-            recovery = (PeerTakeover() if arch == "spirt"
-                        else CheckpointRestore(checkpoint_every=4))
+            recovery = default_recovery(arch, checkpoint_every=4)
             rep = _epoch(arch, faults=plan, recovery=recovery,
                          robust_trim=1 if fname == "byzantine" else 0)
             ttr = (rep.time_to_recover_s if fname == "crash"

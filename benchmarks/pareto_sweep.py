@@ -12,16 +12,29 @@ trajectory is tracked run over run:
      frozen PR 1 reference (``runtime_ref``) on a fault-injected epoch
      (crash + straggler, checkpoint-restore), asserting identical
      reports while timing.
-  3. *Pareto fronts* — for every architecture, the ROADMAP's elastic
-     pricing sweep: ReactiveAutoscaler bounds x Lambda RAM tiers x
-     channel (Redis/S3) under seeded random faults, multi-replicate
-     mean cost vs mean makespan, reduced to the non-dominated front.
+  3. *Pareto fronts* — for every registered architecture (the paper's
+     five plus the registry's hybrids), the ROADMAP's elastic pricing
+     sweep: ReactiveAutoscaler bounds x Lambda RAM tiers x channel
+     (Redis/S3) under seeded random faults, multi-replicate mean cost
+     vs mean makespan, reduced to the non-dominated front.
+  4. *Fault-rate knees* (``--only knee``, ``BENCH_knee.json`` + a PNG
+     chart when matplotlib is available) — the ROADMAP's queued knee
+     detection: cost overhead vs a crash x straggler rate ladder per
+     architecture, reduced to the max-curvature knee by
+     ``repro.serverless.sweep.knee_point``.
+
+Architectures come from ``repro.serverless.archs.list_archs()`` — a
+newly registered ArchSpec shows up in every section with no edits here.
+Channel axes skip grid points an architecture's pinned sync channel
+would falsify (gpu x redis used to report Redis labels with S3
+numbers).
 
 Rows: sweep/<section>/<name>,value,notes
 Usage:
     PYTHONPATH=src python -m benchmarks.pareto_sweep [--quick]
+        [--only analytic|event_engine|pareto|knee]
         [--json BENCH_sweep.json] [--processes N]
-    PYTHONPATH=src python -m benchmarks.run --only sweep
+    PYTHONPATH=src python -m benchmarks.run --only sweep|knee
 """
 from __future__ import annotations
 
@@ -30,18 +43,19 @@ import json
 import time
 
 from repro.serverless import (FaultPlan, CheckpointRestore, ServerlessSetup,
-                              Straggler, WorkerCrash)
+                              Straggler, WorkerCrash, get_arch, list_archs)
 from repro.serverless import runtime as runtime_opt
 from repro.serverless import runtime_ref
-from repro.serverless.simulator import (ARCHS, REDIS, S3,
+from repro.serverless.simulator import (REDIS, S3,
                                         paper_compute_anchor
                                         as _compute_anchor)
 from repro.serverless.sweep import (EventSweepPoint, FaultRates, SweepGrid,
-                                    pareto_front, ram_scaled_compute,
-                                    scalar_sweep, sweep_analytic,
-                                    sweep_events)
+                                    knee_point, pareto_front,
+                                    ram_scaled_compute, scalar_sweep,
+                                    sweep_analytic, sweep_events)
 
 N_PARAMS = int(4.2e6)            # MobileNet
+SECTIONS = ("analytic", "event_engine", "pareto", "knee")
 
 
 def _analytic_grid(quick: bool) -> SweepGrid:
@@ -122,14 +136,18 @@ def bench_event_engine(csv_rows, quick: bool) -> dict:
 
 def elastic_pricing_points(rams, scalers):
     """The ROADMAP's elastic pricing sweep: autoscaler (min, max)
-    bounds x RAM tiers x channel, per architecture.  Shared with
-    ``benchmarks/trace_replay.py`` so both benchmarks chart the same
-    grid and their fronts stay comparable."""
+    bounds x RAM tiers x channel, per registered architecture.  Shared
+    with ``benchmarks/trace_replay.py`` so both benchmarks chart the
+    same grid and their fronts stay comparable.  Channel pairings a
+    spec's pinned sync channel would falsify are skipped (the gpu
+    baseline syncs via S3 whatever the label says)."""
     points = []
-    for arch in ARCHS:
+    for arch in list_archs():
         model = ram_scaled_compute(_compute_anchor(arch))
         for ram in rams:
             for ch in (REDIS, S3):
+                if get_arch(arch).pins_channel(ch):
+                    continue      # label would disagree with the numbers
                 for lo, hi in scalers:
                     points.append(EventSweepPoint(
                         arch=arch, n_params=N_PARAMS,
@@ -161,7 +179,7 @@ def bench_pareto(csv_rows, quick: bool, processes) -> dict:
                      f"{n_sims} fault-injected epochs in {elapsed:.2f}s"))
 
     fronts = {}
-    for arch in ARCHS:
+    for arch in list_archs():
         rows = [s for s in stats if s.point.arch == arch]
         costs = [s.cost_mean for s in rows]
         makespans = [s.makespan_mean_s for s in rows]
@@ -193,6 +211,113 @@ def bench_pareto(csv_rows, quick: bool, processes) -> dict:
                 sims_per_s=n_sims / elapsed, fronts=fronts)
 
 
+# categorical line palette (validated colorblind-safe adjacent order —
+# dataviz reference palette, light mode) + knee chart styling
+_SERIES_COLORS = ("#2a78d6", "#eb6834", "#1baf7a", "#eda100", "#e87ba4",
+                  "#008300", "#4a3aa7", "#e34948")
+_SURFACE, _INK, _INK2 = "#fcfcfb", "#0b0b0b", "#52514e"
+
+
+def _knee_rate_ladder(quick: bool):
+    return ((0.0, 0.15, 0.3, 0.45, 0.6) if quick
+            else (0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8))
+
+
+def bench_knee(csv_rows, quick: bool, processes,
+               chart_path="knee_overhead.png") -> dict:
+    """Fault-rate knee per architecture: cost overhead vs a
+    crash x straggler rate ladder (both rates stepped together),
+    reduced to the max-curvature point by :func:`knee_point`.  Every
+    point uses its architecture's ``recovery="auto"`` policy, so the
+    knee compares checkpoint-restore archs against SPIRT-style
+    takeover at matched fault pressure."""
+    archs = list_archs()
+    ladder = _knee_rate_ladder(quick)
+    reps = 3 if quick else 8
+    points = [EventSweepPoint(arch=a, n_params=N_PARAMS,
+                              compute_s_per_batch=_compute_anchor(a),
+                              label=a)
+              for a in archs]
+    t0 = time.perf_counter()
+    curves = {a: [] for a in archs}
+    # one small grid per rung: a fresh spawn pool per rung would pay
+    # interpreter + jax import many times over for ~20 fast epochs, so
+    # default to inline unless the caller asks for processes
+    processes = 1 if processes is None else processes
+    for r in ladder:
+        stats = sweep_events(points,
+                             rates=FaultRates(crash_rate=r,
+                                              straggler_rate=r),
+                             n_replicates=reps, seed=7,
+                             processes=processes)
+        for s in stats:
+            curves[s.point.arch].append(s.cost_overhead_mean)
+    elapsed = time.perf_counter() - t0
+
+    knees = {}
+    for a in archs:
+        try:
+            ki = knee_point(ladder, curves[a])
+        except ValueError:        # flat curve: no knee to report
+            ki = None
+        knees[a] = ki
+        rate = float("nan") if ki is None else ladder[ki]
+        over = float("nan") if ki is None else curves[a][ki]
+        csv_rows.append((f"sweep/knee/{a}/rate", rate,
+                         f"cost_overhead={over:.3f} reps={reps} "
+                         f"recovery={get_arch(a).default_recovery}"))
+    chart = _knee_chart(ladder, curves, knees, archs, chart_path)
+    if chart:
+        csv_rows.append(("sweep/knee/_chart", 1, chart))
+    return dict(rates=list(ladder), replicates=reps, elapsed_s=elapsed,
+                curves=curves,
+                knees={a: (None if k is None else
+                           dict(rate=ladder[k],
+                                cost_overhead=curves[a][k]))
+                       for a, k in knees.items()},
+                chart=chart)
+
+
+def _knee_chart(ladder, curves, knees, archs, path):
+    """One light-surface line chart, knees marked; returns the path or
+    None when matplotlib is unavailable (CI installs it, the dev
+    container has it — but the benchmark must not require it)."""
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        return None
+    fig, ax = plt.subplots(figsize=(7.5, 4.5), dpi=144)
+    fig.patch.set_facecolor(_SURFACE)
+    ax.set_facecolor(_SURFACE)
+    for i, a in enumerate(archs):
+        c = _SERIES_COLORS[i % len(_SERIES_COLORS)]
+        ax.plot(ladder, curves[a], color=c, linewidth=2, label=a,
+                zorder=3)
+        ki = knees[a]
+        if ki is not None:
+            ax.plot([ladder[ki]], [curves[a][ki]], "o", color=c,
+                    markersize=7, markeredgecolor=_SURFACE,
+                    markeredgewidth=1.5, zorder=4)
+    ax.set_xlabel("crash x straggler rate (per worker per epoch)",
+                  color=_INK2)
+    ax.set_ylabel("mean cost overhead vs fault-free", color=_INK2)
+    ax.set_title("Fault-rate knee per architecture (dot = max "
+                 "curvature)", color=_INK, loc="left")
+    ax.grid(True, color="#e7e6e3", linewidth=0.8, zorder=0)
+    for s in ("top", "right"):
+        ax.spines[s].set_visible(False)
+    for s in ("left", "bottom"):
+        ax.spines[s].set_color("#d7d6d2")
+    ax.tick_params(colors=_INK2)
+    ax.legend(frameon=False, fontsize=8, ncol=2, labelcolor=_INK)
+    fig.tight_layout()
+    fig.savefig(path, facecolor=_SURFACE)
+    plt.close(fig)
+    return path
+
+
 def _timed(fn) -> float:
     t0 = time.perf_counter()
     fn()
@@ -206,32 +331,64 @@ def _timed_r(fn):
 
 
 def run(csv_rows, *, quick: bool = False, processes=None,
-        json_path: str = "BENCH_sweep.json"):
-    payload = {
-        "benchmark": "pareto_sweep",
-        "quick": quick,
-        "analytic": bench_analytic(csv_rows, quick),
-        "event_engine": bench_event_engine(csv_rows, quick),
-        "event_sweep": bench_pareto(csv_rows, quick, processes),
-    }
-    if json_path:
+        json_path: str = "BENCH_sweep.json", only=None,
+        knee_json: str = "BENCH_knee.json",
+        knee_chart: str = "knee_overhead.png"):
+    # knee is opt-in (--only knee / benchmarks.run --only knee): CI runs
+    # it as its own artifact-producing step next to the default three
+    sections = SECTIONS[:3] if only is None else (only,)
+    payload = {"benchmark": "pareto_sweep", "quick": quick}
+    if "analytic" in sections:
+        payload["analytic"] = bench_analytic(csv_rows, quick)
+    if "event_engine" in sections:
+        payload["event_engine"] = bench_event_engine(csv_rows, quick)
+    if "pareto" in sections:
+        payload["event_sweep"] = bench_pareto(csv_rows, quick, processes)
+    if "knee" in sections:
+        knee = bench_knee(csv_rows, quick, processes,
+                          chart_path=knee_chart)
+        payload["knee"] = knee
+        if knee_json:
+            with open(knee_json, "w") as f:
+                json.dump({"benchmark": "knee", "quick": quick,
+                           **knee}, f, indent=2)
+            csv_rows.append(("sweep/knee/_json", 1, knee_json))
+    # only a run of ALL default sections may replace the TRACKED
+    # BENCH_sweep.json — a --only iteration must not overwrite the
+    # record with a partial payload; an explicit non-default --json
+    # path is always honoured (and, dumped last, carries every section
+    # that ran, knee included)
+    if json_path and (only is None or json_path != "BENCH_sweep.json"):
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2)
         csv_rows.append(("sweep/_json", 1, json_path))
     return csv_rows
 
 
+def run_knee(csv_rows):
+    """``benchmarks.run --only knee`` entry: just the knee section."""
+    return run(csv_rows, only="knee")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller grid / fewer replicates (CI)")
-    ap.add_argument("--json", default="BENCH_sweep.json")
+    ap.add_argument("--only", default=None, choices=SECTIONS,
+                    help="run a single section (e.g. knee)")
+    ap.add_argument("--json", default="BENCH_sweep.json",
+                    help="payload path; with --only, the tracked "
+                         "default is left untouched (pass another "
+                         "path to capture a partial run)")
+    ap.add_argument("--knee-json", default="BENCH_knee.json")
+    ap.add_argument("--knee-chart", default="knee_overhead.png")
     ap.add_argument("--processes", type=int, default=None,
                     help="0/1 inline; default cpu count (<=8)")
     args = ap.parse_args()
     rows = []
     run(rows, quick=args.quick, processes=args.processes,
-        json_path=args.json)
+        json_path=args.json, only=args.only, knee_json=args.knee_json,
+        knee_chart=args.knee_chart)
     print("name,value,derived")
     for name, value, notes in rows:
         print(f"{name},{value},{str(notes).replace(',', ';')}")

@@ -2,7 +2,7 @@
 
 Prints ``name,value,derived`` CSV rows.  Usage:
     PYTHONPATH=src python -m benchmarks.run [--only table2|fig23|table3|
-        roofline|strategy_matrix|fault_tolerance|sweep|trace]
+        roofline|strategy_matrix|fault_tolerance|sweep|knee|trace]
 """
 from __future__ import annotations
 
@@ -27,6 +27,7 @@ def main() -> None:
         "strategy_matrix": strategy_matrix.run,
         "fault_tolerance": fault_tolerance.run,
         "sweep": pareto_sweep.run,
+        "knee": pareto_sweep.run_knee,
         "trace": trace_replay.run,
     }
     if args.only:

@@ -21,18 +21,17 @@ import numpy as np
 from repro import optim
 from repro.configs.base import get_config
 from repro.core import build_train_step, get_strategy, losses
-from repro.core.strategies import MLLess, Spirt
 from repro.data import cifar_like
 from repro.models import build_cnn
-from repro.serverless import simulate_epoch
+from repro.serverless import ARCHS, get_arch, simulate_epoch
 
-STRATS = {
-    "gpu": ("allreduce", {}),           # GPU baseline = ring allreduce
-    "spirt": ("spirt", {"microbatches": 4}),
-    "mlless": ("mlless", {"threshold": 0.7}),
-    "scatterreduce": ("scatterreduce", {}),
-    "allreduce": ("allreduce", {}),
-}
+# each ArchSpec names its real-training strategy (gpu = ring allreduce,
+# spirt = K-step accumulation, allreduce = the λML master as a
+# parameter server, ...) — the sim arch and the trained arch are one
+# registry object
+STRATS = {name: (get_arch(name).jax_strategy,
+                 dict(get_arch(name).jax_strategy_kwargs))
+          for name in ARCHS}
 
 
 def run(csv_rows, steps=50, batch=96):
@@ -68,8 +67,7 @@ def run(csv_rows, steps=50, batch=96):
         # simulated wall-clock per epoch for this strategy; GPU compute
         # per batch is ~4x faster than a Lambda vCPU (paper: 92s/24
         # batches vs 14-15s per serverless batch)
-        sim_arch = "gpu" if name == "gpu" else sname
-        rep = simulate_epoch(sim_arch, n_params=int(4.2e6),
+        rep = simulate_epoch(name, n_params=int(4.2e6),
                              compute_s_per_batch=0.25 if name == "gpu"
                              else 1.0)
         results[name] = (acc_curve[-1], rep.per_worker_s)

@@ -33,9 +33,8 @@ import json
 import time
 
 from benchmarks.pareto_sweep import elastic_pricing_points
-from repro.serverless import lambda_default
-from repro.serverless.simulator import (ARCHS,
-                                        paper_compute_anchor
+from repro.serverless import lambda_default, list_archs
+from repro.serverless.simulator import (paper_compute_anchor
                                         as _compute_anchor)
 from repro.serverless.sweep import (EventSweepPoint, FaultRates,
                                     pareto_front, sweep_events)
@@ -90,7 +89,7 @@ def bench_tail_inflation(csv_rows, quick: bool, processes) -> dict:
     points = [EventSweepPoint(arch=arch, n_params=N_PARAMS,
                               compute_s_per_batch=_compute_anchor(arch),
                               label=arch)
-              for arch in ARCHS]
+              for arch in list_archs()]
     traced = sweep_events(points, rates=TRACED, trace=_TRACE,
                           n_replicates=reps, seed=42, processes=processes)
     poisson = sweep_events(points, rates=POISSON, n_replicates=reps,
@@ -136,7 +135,7 @@ def bench_pareto(csv_rows, quick: bool, processes) -> dict:
                      f"{2 * len(points) * reps} epochs in {elapsed:.2f}s"))
 
     fronts = {}
-    for arch in ARCHS:
+    for arch in list_archs():
         arms = {}
         for arm, stats in (("traced", traced), ("poisson", poisson)):
             rows = [s for s in stats if s.point.arch == arch]

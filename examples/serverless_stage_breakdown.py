@@ -3,8 +3,14 @@
 architecture, plus cost, from the simulator.
 
   PYTHONPATH=src python examples/serverless_stage_breakdown.py
+
+Iterates every *registered* architecture (``list_archs()``), so the
+beyond-paper hybrids from ``repro.serverless.archs`` — and anything a
+user registers — appear alongside the paper's five; hybrids anchor
+their calibration on the paper row their spec names.
 """
-from repro.serverless import ServerlessSetup, simulate_epoch
+from repro.serverless import ServerlessSetup, get_arch, list_archs, \
+    simulate_epoch
 from repro.serverless.simulator import PAPER_TABLE2, paper_compute_anchor
 
 
@@ -13,16 +19,21 @@ def main():
           "(paper §4.1 setting)\n")
     print(f"{'framework':15s} {'fetch':>7s} {'compute':>8s} {'sync':>7s} "
           f"{'update':>7s} {'total s':>8s} {'$/epoch':>8s}")
-    for arch in ("spirt", "mlless", "scatterreduce", "allreduce", "gpu"):
-        _, ram, _, paper_total = PAPER_TABLE2["mobilenet"][arch]
-        setup = ServerlessSetup(ram_gb=(ram or 2048) / 1024.0)
+    for arch in list_archs():
+        spec = get_arch(arch)
+        # anchorless third-party specs fail here with the registry's
+        # actionable "set ArchSpec.anchor" error, not a bare KeyError
         comp = paper_compute_anchor(arch)
+        _, ram, _, paper_total = \
+            PAPER_TABLE2["mobilenet"][spec.anchor or arch]
+        setup = ServerlessSetup(ram_gb=(ram or 2048) / 1024.0)
         rep = simulate_epoch(arch, n_params=4_200_000,
                              compute_s_per_batch=comp, setup=setup)
         s = rep.stages
+        paper = f"(paper: {paper_total})" if spec.paper else "(hybrid)"
         print(f"{arch:15s} {s.fetch:7.2f} {s.compute:8.1f} {s.sync:7.2f} "
               f"{s.update:7.2f} {rep.per_worker_s:8.1f} "
-              f"{rep.total_cost:8.4f}   (paper: {paper_total})")
+              f"{rep.total_cost:8.4f}   {paper}")
     print("\nNote how statelessness shows up: MLLess/λML reload per batch"
           "\n(fetch), SPIRT amortizes via gradient accumulation, the GPU"
           "\nbaseline loads once.")

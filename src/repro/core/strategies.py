@@ -242,4 +242,14 @@ def get_strategy(name: str, **kw) -> Strategy:
         #   inner=get_strategy("trimmed_mean"), workers=(0,))
         from repro.serverless.faults import ByzantineGradients
         return ByzantineGradients(**kw)
-    return STRATEGIES[name](**kw)
+    if name in STRATEGIES:
+        return STRATEGIES[name](**kw)
+    # simulated architecture names resolve through the ArchSpec registry
+    # (sim-arch and real-training-arch are one object): e.g. "gpu" is a
+    # ring allreduce, "hier_spirt"/"spirt_s3" ride SPIRT accumulation.
+    # Lazy import keeps core usable without the serverless package.
+    from repro.serverless.archs import _REGISTRY
+    spec = _REGISTRY.get(name)
+    if spec is not None and spec.jax_strategy is not None:
+        return spec.make_strategy(**kw)
+    raise KeyError(name)

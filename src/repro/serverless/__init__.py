@@ -1,9 +1,14 @@
+from repro.serverless.archs import (  # noqa: F401
+    ArchSpec, get_arch, list_archs, paper_archs, register_arch,
+    unregister_arch,
+)
 from repro.serverless.simulator import (  # noqa: F401
     ARCHS, Channel, EpochReport, PAPER_TABLE2, REDIS, RoundPlan, S3,
     ServerlessSetup, paper_cost_check, round_plan, simulate_epoch,
 )
 from repro.serverless.runtime import (  # noqa: F401
-    EventRuntime, RuntimeReport, run_event_epoch,
+    EventRuntime, RuntimeReport, default_recovery, resolve_recovery,
+    run_event_epoch,
 )
 from repro.serverless.faults import (  # noqa: F401
     ByzantineGradients, ByzantineWorker, ColdStartStorm, FaultPlan,
@@ -22,6 +27,6 @@ from repro.serverless.traces import (  # noqa: F401
 )
 from repro.serverless.sweep import (  # noqa: F401
     AnalyticSweep, EventPointStats, EventSweepPoint, FaultRates, SweepGrid,
-    iter_grid, pareto_front, ram_scaled_compute, scalar_sweep,
+    iter_grid, knee_point, pareto_front, ram_scaled_compute, scalar_sweep,
     sweep_analytic, sweep_events,
 )

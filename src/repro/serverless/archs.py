@@ -1,0 +1,436 @@
+"""Pluggable architecture registry: one :class:`ArchSpec` per training
+architecture, unifying every layer of the serverless stack.
+
+Before this module the five paper architectures lived in five places in
+lock-step: a string if-chain in ``simulator._round_terms``, a
+hard-coded ``ARCHS`` tuple, ``gpu`` special-cases in the cost formulas
+and the event runtime's billing, a spirt special-case in default
+recovery resolution, and a parallel-but-disconnected class set in
+``repro.core.strategies``.  Adding an architecture meant editing all of
+them.  Now an architecture is ONE frozen :class:`ArchSpec` carrying
+
+  * ``round_terms``   — the per-round stage arithmetic (elementwise:
+    scalars or numpy arrays, so the same function backs the scalar
+    ``simulate_epoch`` and the vectorized ``sweep_analytic``);
+  * ``stateful``      — whether state loads once per epoch (the GPU
+    baseline) or once per round (stateless Lambda);
+  * ``sync_channel``  — an optional *pinned* gradient channel (the GPU
+    baseline always exchanges via S3 regardless of the configured
+    channel; sweeps use this to mark label-vs-numbers mismatches);
+  * ``cost`` / ``fleet_cost`` — analytic and event-engine billing
+    (Lambda GB-seconds vs instance-hours);
+  * ``default_recovery`` — what crash recovery the architecture gets
+    when the caller asks for ``"auto"`` (SPIRT-style in-DB state means
+    peer takeover; everything else re-invokes and replays);
+  * ``jax_strategy``  — the :mod:`repro.core.strategies` name realizing
+    the architecture on real hardware, so the simulated arch and the
+    real-training arch are one object
+    (``repro.core.get_strategy(spec.name)`` resolves through here);
+  * ``anchor`` / ``compute_share`` — which paper Table 2 row calibrates
+    ``simulator.paper_compute_anchor`` for the architecture.
+
+``register_arch`` / ``get_arch`` / ``list_archs`` manage the registry.
+The five paper architectures (``paper=True``) register first, in the
+paper's order; ``simulator.ARCHS`` is derived from them.  Two
+beyond-paper hybrids register below with zero edits anywhere else —
+they flow automatically through ``sweep_analytic``, ``sweep_events``
+(including trace replay), the event engine, and the Pareto/knee
+benchmarks:
+
+  hier_spirt  two-level hierarchy: SPIRT's in-DB averaging inside
+              sqrt(W)-sized groups, ScatterReduce-style chunk exchange
+              across group leaders (the hybrid direction SPIRT's P2P
+              fault-tolerance lineage — arXiv 2309.14148 / 2302.13995
+              — points at).
+  spirt_s3    SPIRT semantics with the gradient path pinned to S3,
+              isolating the Redis premium from the algorithm.
+
+See ``examples/custom_arch.py`` for registering a third-party
+architecture in ~20 lines.  This module stays import-light (numpy +
+pricing only — no jax), so analytic sweeps never pay accelerator
+import costs; ``ArchSpec.make_strategy`` lazy-imports the JAX side.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.costmodel import pricing
+
+
+# ---------------------------------------------------------------------------
+# Channels (moved here from simulator.py, which re-exports them)
+# ---------------------------------------------------------------------------
+def _transfer(nbytes, bandwidth_Bps, latency_s, ops=1):
+    """Channel transfer time.  Elementwise — every argument may be a
+    Python scalar or a broadcastable numpy array, which is what lets the
+    vectorized sweep (``repro.serverless.sweep``) evaluate whole grids
+    through the *same* expressions the scalar path uses (exact
+    agreement by construction)."""
+    return nbytes / bandwidth_Bps + ops * latency_s
+
+
+@dataclasses.dataclass(frozen=True)
+class Channel:
+    """External state channel (Redis on EC2 / S3)."""
+    name: str = "redis"
+    bandwidth_Bps: float = 1.25e9 / 8 * 10      # ~10 Gb EC2 NIC -> 1.25 GB/s
+    latency_s: float = 0.002                    # per operation RTT
+
+    def transfer(self, nbytes: float, ops: int = 1) -> float:
+        return _transfer(nbytes, self.bandwidth_Bps, self.latency_s, ops)
+
+
+S3 = Channel("s3", bandwidth_Bps=0.6e9, latency_s=0.030)
+REDIS = Channel("redis")
+
+
+def _grad_bytes(n_params: int, dtype_bytes: int = 4) -> float:
+    return n_params * dtype_bytes
+
+
+# ---------------------------------------------------------------------------
+# Billing policies
+# ---------------------------------------------------------------------------
+def lambda_epoch_cost(per_worker_s, ram_gb, n_workers):
+    """Analytic epoch billing for stateless Lambda workers; elementwise
+    ``(cost_per_worker, total_cost)``."""
+    cost_worker = pricing.lambda_cost(per_worker_s, ram_gb)
+    return cost_worker, cost_worker * n_workers
+
+
+def instance_epoch_cost(per_worker_s, ram_gb, n_workers):
+    """Analytic epoch billing for stateful instances (GPU baseline):
+    hourly rate, RAM tier is part of the instance price."""
+    cost_worker = pricing.gpu_cost(per_worker_s)
+    return cost_worker, cost_worker * n_workers
+
+
+def lambda_fleet_cost(wall_clocks, ram_gb, makespan_s, n_instances):
+    """Event-engine billing: each Lambda bills GB-seconds for its whole
+    invocation wall-clock (barrier stalls included)."""
+    return sum(pricing.lambda_cost(t, ram_gb) for t in wall_clocks)
+
+
+def instance_fleet_cost(wall_clocks, ram_gb, makespan_s, n_instances):
+    """Event-engine billing: instances bill hourly for the makespan."""
+    return pricing.gpu_cost(makespan_s, n_instances=n_instances)
+
+
+# ---------------------------------------------------------------------------
+# ArchSpec + registry
+# ---------------------------------------------------------------------------
+TermFn = Callable[..., Dict[str, Any]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    """Everything the stack needs to know about one architecture.
+
+    ``round_terms(G=, W=, bw=, lat=, sync_bw=, sync_lat=, nb=,
+    significant_fraction=, accumulation=)`` returns the per-round dict
+    (``n_rounds``, ``batches_per_round``, ``sync_s``, ``update_s``,
+    ``sync_bytes``, ``update_bytes``); the shared dispatcher
+    :func:`arch_round_terms` adds the common state-load term and the
+    ``stateful`` fetch policy.  ``sync_bw``/``sync_lat`` are the
+    gradient path's channel — the configured one unless
+    ``sync_channel`` pins it.
+    """
+    name: str
+    round_terms: TermFn
+    description: str = ""
+    paper: bool = False                    # one of the paper's five
+    stateful: bool = False                 # load state once per epoch
+    sync_channel: Optional[Channel] = None  # pinned gradient channel
+    cost: Callable = lambda_epoch_cost
+    fleet_cost: Callable = lambda_fleet_cost
+    default_recovery: str = "restore"      # "restore" | "takeover"
+    jax_strategy: Optional[str] = None     # repro.core.get_strategy name
+    jax_strategy_kwargs: Tuple[Tuple[str, Any], ...] = ()
+    ram_scales_compute: bool = True        # Lambda vCPU scales with RAM
+    anchor: Optional[str] = None           # PAPER_TABLE2 calibration row
+    compute_share: float = 0.85            # compute share of paper time
+
+    def __post_init__(self):
+        if self.default_recovery not in ("restore", "takeover"):
+            raise ValueError(
+                f"arch {self.name!r}: default_recovery must be "
+                f"'restore' or 'takeover', got "
+                f"{self.default_recovery!r}")
+
+    def pins_channel(self, channel: Channel) -> bool:
+        """True when the configured ``channel`` is overridden by this
+        architecture's pinned gradient channel — the grid point's label
+        then disagrees with its sync numbers and sweeps mark it."""
+        return (self.sync_channel is not None
+                and channel.name != self.sync_channel.name)
+
+    def make_strategy(self, **overrides):
+        """The real-training :class:`repro.core.strategies.Strategy`
+        realizing this architecture (lazy import — keeps this module
+        jax-free for analytic-only users)."""
+        if self.jax_strategy is None:
+            raise ValueError(f"arch {self.name!r} has no JAX strategy")
+        from repro.core.strategies import STRATEGIES, get_strategy
+        if self.jax_strategy == self.name \
+                and self.jax_strategy not in STRATEGIES:
+            # get_strategy falls through to the registry for arch names
+            # it doesn't know, so a spec naming itself (with no
+            # concrete strategy behind the name — unlike e.g. spirt,
+            # which IS a STRATEGIES entry) would recurse forever
+            raise ValueError(
+                f"arch {self.name!r} names itself as its jax_strategy; "
+                "name a concrete repro.core.strategies entry instead")
+        kw = dict(self.jax_strategy_kwargs)
+        kw.update(overrides)
+        return get_strategy(self.jax_strategy, **kw)
+
+
+_REGISTRY: Dict[str, ArchSpec] = {}
+
+
+def register_arch(spec: ArchSpec, *, overwrite: bool = False) -> ArchSpec:
+    """Add ``spec`` to the registry (returns it, so modules can keep a
+    handle).  Re-registering a name is an error unless ``overwrite``
+    — silent replacement is how five-files-in-lock-step bugs start."""
+    if not overwrite and spec.name in _REGISTRY:
+        raise ValueError(f"architecture {spec.name!r} is already "
+                         "registered (pass overwrite=True to replace)")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def unregister_arch(name: str) -> None:
+    """Remove an architecture (tests / examples cleaning up after
+    themselves)."""
+    _REGISTRY.pop(name, None)
+
+
+def get_arch(name: str) -> ArchSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown architecture {name!r}; registered: "
+            f"{', '.join(_REGISTRY)}") from None
+
+
+def list_archs() -> Tuple[str, ...]:
+    """All registered architecture names, in registration order (the
+    paper's five first)."""
+    return tuple(_REGISTRY)
+
+
+def paper_archs() -> Tuple[str, ...]:
+    """The paper's comparison set (``simulator.ARCHS`` derives from
+    this)."""
+    return tuple(n for n, s in _REGISTRY.items() if s.paper)
+
+
+# ---------------------------------------------------------------------------
+# Shared dispatcher (backs simulator._round_terms and the sweeps)
+# ---------------------------------------------------------------------------
+def arch_round_terms(arch, *, n_params, n_workers, bandwidth_Bps,
+                     latency_s, batches_per_worker, model_bytes,
+                     minibatch_bytes, significant_fraction, accumulation):
+    """Per-round stage arithmetic for one architecture, resolved through
+    the registry.  Elementwise: every numeric argument may be a scalar
+    or a broadcastable numpy array — one implementation backs BOTH the
+    scalar :func:`repro.serverless.simulator.round_plan` and the
+    vectorized analytic sweep, so the two agree bit-for-bit.
+
+    Alongside each stage *time* the spec returns the exact wire *bytes*
+    the stage moves (the sum of the ``nbytes`` arguments fed to the
+    channel) — per-op latencies contribute seconds but never bytes.
+    """
+    spec = arch if isinstance(arch, ArchSpec) else get_arch(arch)
+    if spec.sync_channel is not None:
+        sync_bw = spec.sync_channel.bandwidth_Bps
+        sync_lat = spec.sync_channel.latency_s
+    else:
+        sync_bw, sync_lat = bandwidth_Bps, latency_s
+    terms = spec.round_terms(
+        G=_grad_bytes(n_params), W=n_workers,
+        bw=bandwidth_Bps, lat=latency_s,
+        sync_bw=sync_bw, sync_lat=sync_lat,
+        nb=batches_per_worker,
+        significant_fraction=significant_fraction,
+        accumulation=accumulation)
+    # every invocation of a stateless worker reloads model + minibatch;
+    # stateful archs pay it once (fetch_first_round_only)
+    terms["fetch_s"] = _transfer(model_bytes + minibatch_bytes,
+                                 bandwidth_Bps, latency_s, ops=2)
+    terms["fetch_first_round_only"] = spec.stateful
+    return terms
+
+
+def arch_epoch_cost(arch, per_worker_s, ram_gb, n_workers):
+    """(cost_per_worker, total_cost); elementwise in the numeric args."""
+    spec = arch if isinstance(arch, ArchSpec) else get_arch(arch)
+    return spec.cost(per_worker_s, ram_gb, n_workers)
+
+
+# ---------------------------------------------------------------------------
+# The paper's five architectures
+# ---------------------------------------------------------------------------
+def _spirt_terms(*, G, W, bw, lat, sync_bw, sync_lat, nb,
+                 significant_fraction, accumulation):
+    # one long-lived invocation per epoch computes `accumulation`
+    # minibatches; gradients averaged IN the local Redis (in-database
+    # ops): per-minibatch store + one in-db average; a single
+    # cross-worker sync per accumulation round.
+    invocations = np.maximum(1, nb // accumulation)
+    bpr = nb / invocations
+    cross = (W - 1) * _transfer(G, sync_bw, sync_lat, ops=2) \
+        + 2 * sync_lat * W                  # sync queue polls
+    return dict(n_rounds=invocations, batches_per_round=bpr,
+                sync_s=bpr * _transfer(G, sync_bw, sync_lat, ops=1)
+                + cross,
+                update_s=_transfer(0, sync_bw, sync_lat, ops=1),  # in-db
+                sync_bytes=bpr * G + (W - 1) * G,
+                update_bytes=0 * G)
+
+
+def _mlless_terms(*, G, W, bw, lat, sync_bw, sync_lat, nb,
+                  significant_fraction, accumulation):
+    # per-minibatch invocations; only significant updates pushed;
+    # supervisor round-trip gates every sync step
+    pushed = significant_fraction * G
+    per_sync = (_transfer(pushed, sync_bw, sync_lat, ops=1)
+                + (W - 1) * _transfer(pushed, sync_bw, sync_lat, ops=1)
+                + 4 * sync_lat              # queue notify + supervisor
+                + 2 * sync_lat * W)         # supervisor fan-out
+    return dict(n_rounds=nb, batches_per_round=1.0,
+                sync_s=per_sync,
+                update_s=_transfer(G, sync_bw, sync_lat, ops=1),
+                sync_bytes=pushed + (W - 1) * pushed,
+                update_bytes=1.0 * G)
+
+
+def _scatterreduce_terms(*, G, W, bw, lat, sync_bw, sync_lat, nb,
+                         significant_fraction, accumulation):
+    # push W-1 chunks, fetch W-1 assigned chunks, push aggregate,
+    # fetch W-1 aggregated chunks
+    chunk = G / W
+    per_sync = (_transfer((W - 1) * chunk, sync_bw, sync_lat,
+                          ops=W - 1) * 2
+                + _transfer(chunk, sync_bw, sync_lat, ops=1)
+                + _transfer((W - 1) * chunk, sync_bw, sync_lat,
+                            ops=W - 1))
+    return dict(n_rounds=nb, batches_per_round=1.0,
+                sync_s=per_sync,
+                update_s=_transfer(G, sync_bw, sync_lat, ops=1),
+                sync_bytes=(W - 1) * chunk * 2 + chunk + (W - 1) * chunk,
+                update_bytes=1.0 * G)
+
+
+def _allreduce_terms(*, G, W, bw, lat, sync_bw, sync_lat, nb,
+                     significant_fraction, accumulation):
+    # everyone pushes G; the designated master then pulls all W
+    # gradients SERIALLY, aggregates and pushes the result; every
+    # worker blocks on the master (the paper's §4.2 scalability
+    # bottleneck), then fetches
+    master_path = W * _transfer(G, sync_bw, sync_lat, ops=1) \
+        + _transfer(G, sync_bw, sync_lat, ops=1)
+    per_sync = (_transfer(G, sync_bw, sync_lat, ops=1) + master_path
+                + _transfer(G, sync_bw, sync_lat, ops=1))
+    return dict(n_rounds=nb, batches_per_round=1.0,
+                sync_s=per_sync,
+                update_s=_transfer(G, sync_bw, sync_lat, ops=1),
+                sync_bytes=1.0 * G + (W * G + G) + G,
+                update_bytes=1.0 * G)
+
+
+def _gpu_terms(*, G, W, bw, lat, sync_bw, sync_lat, nb,
+               significant_fraction, accumulation):
+    # stateful: load once; gradient exchange on the pinned S3 channel
+    per_sync = _transfer(G, sync_bw, sync_lat, ops=1) \
+        + (W - 1) * _transfer(G, sync_bw, sync_lat, ops=1)
+    return dict(n_rounds=nb, batches_per_round=1.0,
+                sync_s=per_sync, update_s=0.0,
+                sync_bytes=1.0 * G + (W - 1) * G,
+                update_bytes=0 * G)
+
+
+register_arch(ArchSpec(
+    name="spirt", round_terms=_spirt_terms, paper=True,
+    description="P2P; per-worker in-DB gradient averaging + in-DB "
+                "update, one cross-worker sync per accumulation round",
+    default_recovery="takeover",
+    jax_strategy="spirt", jax_strategy_kwargs=(("microbatches", 4),)))
+
+register_arch(ArchSpec(
+    name="mlless", round_terms=_mlless_terms, paper=True,
+    description="significance filtering; supervisor-coordinated sync",
+    jax_strategy="mlless", jax_strategy_kwargs=(("threshold", 0.7),)))
+
+register_arch(ArchSpec(
+    name="scatterreduce", round_terms=_scatterreduce_terms, paper=True,
+    description="chunk ownership; 2 rounds of chunk exchange",
+    jax_strategy="scatterreduce"))
+
+register_arch(ArchSpec(
+    name="allreduce", round_terms=_allreduce_terms, paper=True,
+    description="master aggregates; everyone else pushes+polls",
+    jax_strategy="parameter_server"))
+
+register_arch(ArchSpec(
+    name="gpu", round_terms=_gpu_terms, paper=True,
+    description="stateful instances; S3 gradient exchange only",
+    stateful=True, sync_channel=S3,
+    cost=instance_epoch_cost, fleet_cost=instance_fleet_cost,
+    jax_strategy="allreduce",              # ring all-reduce on-device
+    ram_scales_compute=False,              # fixed by the accelerator
+    compute_share=0.90))
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper hybrids — registered here and NOWHERE else; everything
+# downstream (sweeps, event engine, trace replay, Pareto/knee
+# benchmarks) picks them up through the registry.
+# ---------------------------------------------------------------------------
+def _hier_spirt_terms(*, G, W, bw, lat, sync_bw, sync_lat, nb,
+                      significant_fraction, accumulation):
+    # two-level hierarchy: SPIRT's in-DB averaging inside groups of
+    # ~sqrt(W) workers, then a ScatterReduce-style chunk exchange among
+    # the group leaders.  Group-local traffic is identical to SPIRT
+    # with W -> group size; the cross-group path moves n_groups chunks
+    # of G / n_groups bytes instead of (W-1) full gradients, which is
+    # what flattens the sync wall at large W.
+    group = np.maximum(1, np.floor(np.sqrt(W)))
+    n_groups = np.ceil(W / group)
+    invocations = np.maximum(1, nb // accumulation)
+    bpr = nb / invocations
+    local = bpr * _transfer(G, sync_bw, sync_lat, ops=1) \
+        + (group - 1) * _transfer(G, sync_bw, sync_lat, ops=2) \
+        + 2 * sync_lat * group              # group-local queue polls
+    chunk = G / n_groups
+    cross = (_transfer((n_groups - 1) * chunk, sync_bw, sync_lat,
+                       ops=n_groups - 1) * 2
+             + _transfer(chunk, sync_bw, sync_lat, ops=1))
+    return dict(n_rounds=invocations, batches_per_round=bpr,
+                sync_s=local + cross,
+                update_s=_transfer(0, sync_bw, sync_lat, ops=1),  # in-db
+                sync_bytes=bpr * G + (group - 1) * G
+                + (n_groups - 1) * chunk * 2 + chunk,
+                update_bytes=0 * G)
+
+
+register_arch(ArchSpec(
+    name="hier_spirt", round_terms=_hier_spirt_terms,
+    description="two-level SPIRT: group-local in-DB averaging, "
+                "cross-group chunk exchange among leaders",
+    default_recovery="takeover",           # state lives in the DB
+    jax_strategy="spirt", jax_strategy_kwargs=(("microbatches", 4),),
+    anchor="spirt"))
+
+register_arch(ArchSpec(
+    name="spirt_s3", round_terms=_spirt_terms,
+    description="SPIRT semantics over the S3 channel (isolates the "
+                "Redis premium from the algorithm)",
+    sync_channel=S3,
+    default_recovery="takeover",           # state lives in S3 instead
+    jax_strategy="spirt", jax_strategy_kwargs=(("microbatches", 4),),
+    anchor="spirt"))

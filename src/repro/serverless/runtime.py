@@ -64,12 +64,38 @@ import math
 from heapq import heappop, heappush
 from typing import Dict, List, Optional, Tuple
 
-from repro.costmodel import pricing
+from repro.serverless.archs import get_arch
 from repro.serverless.faults import FaultPlan
 from repro.serverless.recovery import (CheckpointRestore, PeerTakeover,
                                        RecoveryEvent, RecoveryPolicy)
 from repro.serverless.simulator import (RoundPlan, ServerlessSetup,
                                         round_plan)
+
+
+def resolve_recovery(arch: str, name: str, *,
+                     checkpoint_every: int = 4) -> RecoveryPolicy:
+    """THE string -> :class:`RecoveryPolicy` mapping (one place —
+    :func:`run_event_epoch`, the sweep engine and the benchmarks all
+    route through here).  ``"auto"`` resolves the architecture's own
+    :class:`~repro.serverless.archs.ArchSpec` default: in-DB-state
+    designs (SPIRT and its hybrids) take over from peers, everything
+    else re-invokes and replays from a checkpoint."""
+    if name == "auto":
+        name = get_arch(arch).default_recovery
+    if name == "takeover":
+        return PeerTakeover()
+    if name == "restore":
+        return CheckpointRestore(checkpoint_every=checkpoint_every)
+    raise ValueError(f"unknown recovery {name!r}; expected 'auto', "
+                     "'restore', 'takeover' or a RecoveryPolicy")
+
+
+def default_recovery(arch: str, *,
+                     checkpoint_every: int = 4) -> RecoveryPolicy:
+    """The architecture's ``recovery="auto"`` policy (see
+    :func:`resolve_recovery`)."""
+    return resolve_recovery(arch, "auto",
+                            checkpoint_every=checkpoint_every)
 
 # worker lifecycle states
 COLD_START, STATE_LOAD, COMPUTE, SYNC, WAIT_BARRIER, UPDATE, DONE, DEAD = (
@@ -619,16 +645,13 @@ class EventRuntime:
                     + plan.total_batches * plan.compute_s_per_batch
                     + plan.n_rounds * (plan.sync_s + plan.update_s))
 
-        # billing: lambda bills each worker's invocation wall-clock;
-        # the GPU baseline bills instances for the whole makespan
-        if plan.arch == "gpu":
-            total_cost = pricing.gpu_cost(makespan,
-                                          n_instances=len(self.workers))
-        else:
-            total_cost = sum(
-                pricing.lambda_cost((w.done_time or makespan)
-                                    - w.spawn_time, plan.ram_gb)
-                for w in self.workers)
+        # billing policy comes from the ArchSpec: Lambda archs bill each
+        # worker's invocation wall-clock, stateful instances (the GPU
+        # baseline) bill for the whole makespan
+        total_cost = get_arch(plan.arch).fleet_cost(
+            ((w.done_time or makespan) - w.spawn_time
+             for w in self.workers),
+            plan.ram_gb, makespan, len(self.workers))
 
         stage_totals = {"cold_start": 0.0, "fetch": 0.0, "compute": 0.0,
                         "sync": 0.0, "update": 0.0, "wait": 0.0,
@@ -670,10 +693,20 @@ def run_event_epoch(arch: str, *, n_params: int, compute_s_per_batch: float,
                     significant_fraction: float = 0.3,
                     accumulation: int = 24,
                     faults: Optional[FaultPlan] = None,
-                    recovery: Optional[RecoveryPolicy] = None,
+                    recovery=None,
                     autoscaler=None, robust_trim: int = 0,
                     max_timeline: int = 0) -> RuntimeReport:
-    """One event-driven epoch; mirrors ``simulate_epoch``'s signature."""
+    """One event-driven epoch; mirrors ``simulate_epoch``'s signature.
+
+    ``recovery`` accepts a :class:`RecoveryPolicy`, one of the strings
+    ``"auto"`` (resolve the architecture's default via
+    :func:`default_recovery`) / ``"restore"`` / ``"takeover"`` (the
+    sweep layer's vocabulary), or ``None`` (checkpoint-restore — the
+    frozen reference engine's behaviour, kept so ``runtime_ref``
+    equivalence scenarios stay policy-identical).
+    """
+    if isinstance(recovery, str):
+        recovery = resolve_recovery(arch, recovery)
     plan = round_plan(arch, n_params=n_params,
                       compute_s_per_batch=compute_s_per_batch, setup=setup,
                       significant_fraction=significant_fraction,

@@ -27,39 +27,24 @@ The per-round decomposition lives in :class:`RoundPlan` /
 (``repro.serverless.runtime``) replays event by event: ``simulate_epoch``
 is the engine's closed-form fault-free fast path, and faults, recovery,
 and elasticity live in the engine on top of the same timing terms.
+
+Architecture semantics live in the pluggable registry
+(``repro.serverless.archs``): each :class:`~repro.serverless.archs.
+ArchSpec` carries its per-round term function, billing, channel policy
+and recovery default, and :data:`ARCHS` (the paper's five) is derived
+from it.  Registering a new spec is all it takes for an architecture to
+flow through this module, the sweeps and the event engine.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
-
-import numpy as np
+from typing import Dict
 
 from repro.costmodel import pricing
-
-
-def _transfer(nbytes, bandwidth_Bps, latency_s, ops=1):
-    """Channel transfer time.  Elementwise — every argument may be a
-    Python scalar or a broadcastable numpy array, which is what lets the
-    vectorized sweep (``repro.serverless.sweep``) evaluate whole grids
-    through the *same* expressions the scalar path uses (exact
-    agreement by construction)."""
-    return nbytes / bandwidth_Bps + ops * latency_s
-
-
-@dataclasses.dataclass(frozen=True)
-class Channel:
-    """External state channel (Redis on EC2 / S3)."""
-    name: str = "redis"
-    bandwidth_Bps: float = 1.25e9 / 8 * 10      # ~10 Gb EC2 NIC -> 1.25 GB/s
-    latency_s: float = 0.002                    # per operation RTT
-
-    def transfer(self, nbytes: float, ops: int = 1) -> float:
-        return _transfer(nbytes, self.bandwidth_Bps, self.latency_s, ops)
-
-
-S3 = Channel("s3", bandwidth_Bps=0.6e9, latency_s=0.030)
-REDIS = Channel("redis")
+from repro.serverless.archs import (  # noqa: F401  (re-exported API)
+    REDIS, S3, Channel, _grad_bytes, _transfer, arch_epoch_cost,
+    arch_round_terms, get_arch, list_archs, paper_archs,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +56,22 @@ class ServerlessSetup:
     model_bytes: float = 17e6          # MobileNet fp32 ~17 MB
     minibatch_bytes: float = 512 * 32 * 32 * 3 * 4
     channel: Channel = REDIS
+
+    def __post_init__(self):
+        if self.n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got "
+                             f"{self.n_workers}")
+        if self.batches_per_worker < 1:
+            raise ValueError(f"batches_per_worker must be >= 1, got "
+                             f"{self.batches_per_worker}")
+        if not self.ram_gb > 0:
+            raise ValueError(f"ram_gb must be > 0, got {self.ram_gb}")
+        if self.cold_start_s < 0:
+            raise ValueError(f"cold_start_s must be >= 0, got "
+                             f"{self.cold_start_s}")
+        if self.model_bytes < 0 or self.minibatch_bytes < 0:
+            raise ValueError("model_bytes / minibatch_bytes must be "
+                             ">= 0")
 
 
 @dataclasses.dataclass
@@ -98,11 +99,9 @@ class EpochReport:
     ram_gb: float
 
 
-def _grad_bytes(n_params: int, dtype_bytes: int = 4) -> float:
-    return n_params * dtype_bytes
-
-
-ARCHS = ("spirt", "mlless", "scatterreduce", "allreduce", "gpu")
+# the paper's comparison set, derived from the registry (beyond-paper
+# registrations show up in list_archs(), not here)
+ARCHS = paper_archs()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,93 +141,9 @@ class RoundPlan:
         return self.sync_bytes + self.update_bytes
 
 
-def _round_terms(arch, *, n_params, n_workers, bandwidth_Bps, latency_s,
-                 batches_per_worker, model_bytes, minibatch_bytes,
-                 significant_fraction, accumulation):
-    """Per-round stage arithmetic for one architecture.
-
-    Elementwise: every numeric argument may be a scalar or a
-    broadcastable numpy array.  This single implementation backs BOTH
-    the scalar :func:`round_plan` and the vectorized analytic sweep
-    (``repro.serverless.sweep``), so the two agree bit-for-bit.
-
-    Alongside each stage *time* it returns the exact wire *bytes* the
-    stage moves (the sum of the ``nbytes`` arguments fed to the channel)
-    — per-op latencies contribute seconds but never bytes.
-    """
-    W = n_workers
-    bw, lat = bandwidth_Bps, latency_s
-    G = _grad_bytes(n_params)
-    nb = batches_per_worker
-
-    # every invocation reloads model + its minibatch (statelessness)
-    per_invocation_load = _transfer(model_bytes + minibatch_bytes,
-                                    bw, lat, ops=2)
-    terms = dict(fetch_s=per_invocation_load, fetch_first_round_only=False)
-
-    if arch == "spirt":
-        # one long-lived invocation per epoch computes `accumulation`
-        # minibatches; gradients averaged IN the local Redis (in-database
-        # ops): per-minibatch store + one in-db average; a single
-        # cross-worker sync per accumulation round.
-        invocations = np.maximum(1, nb // accumulation)
-        bpr = nb / invocations
-        cross = (W - 1) * _transfer(G, bw, lat, ops=2) \
-            + 2 * lat * W                       # sync queue polls
-        return dict(n_rounds=invocations, batches_per_round=bpr,
-                    sync_s=bpr * _transfer(G, bw, lat, ops=1) + cross,
-                    update_s=_transfer(0, bw, lat, ops=1),  # in-db update
-                    sync_bytes=bpr * G + (W - 1) * G,
-                    update_bytes=0 * G, **terms)
-    if arch == "mlless":
-        # per-minibatch invocations; only significant updates pushed;
-        # supervisor round-trip gates every sync step
-        pushed = significant_fraction * G
-        per_sync = (_transfer(pushed, bw, lat, ops=1)
-                    + (W - 1) * _transfer(pushed, bw, lat, ops=1)
-                    + 4 * lat                   # queue notify + supervisor
-                    + 2 * lat * W)              # supervisor fan-out
-        return dict(n_rounds=nb, batches_per_round=1.0,
-                    sync_s=per_sync,
-                    update_s=_transfer(G, bw, lat, ops=1),
-                    sync_bytes=pushed + (W - 1) * pushed,
-                    update_bytes=1.0 * G, **terms)
-    if arch == "scatterreduce":
-        # push W-1 chunks, fetch W-1 assigned chunks, push aggregate,
-        # fetch W-1 aggregated chunks
-        chunk = G / W
-        per_sync = (_transfer((W - 1) * chunk, bw, lat, ops=W - 1) * 2
-                    + _transfer(chunk, bw, lat, ops=1)
-                    + _transfer((W - 1) * chunk, bw, lat, ops=W - 1))
-        return dict(n_rounds=nb, batches_per_round=1.0,
-                    sync_s=per_sync,
-                    update_s=_transfer(G, bw, lat, ops=1),
-                    sync_bytes=(W - 1) * chunk * 2 + chunk
-                    + (W - 1) * chunk,
-                    update_bytes=1.0 * G, **terms)
-    if arch == "allreduce":
-        # everyone pushes G; the designated master then pulls all W
-        # gradients SERIALLY, aggregates and pushes the result; every
-        # worker blocks on the master (the paper's §4.2 scalability
-        # bottleneck), then fetches
-        master_path = W * _transfer(G, bw, lat, ops=1) \
-            + _transfer(G, bw, lat, ops=1)
-        per_sync = (_transfer(G, bw, lat, ops=1) + master_path
-                    + _transfer(G, bw, lat, ops=1))
-        return dict(n_rounds=nb, batches_per_round=1.0,
-                    sync_s=per_sync,
-                    update_s=_transfer(G, bw, lat, ops=1),
-                    sync_bytes=1.0 * G + (W * G + G) + G,
-                    update_bytes=1.0 * G, **terms)
-    if arch == "gpu":
-        # stateful: load once; S3 gradient exchange per step
-        per_sync = S3.transfer(G, ops=1) + (W - 1) * S3.transfer(G, ops=1)
-        terms["fetch_first_round_only"] = True
-        return dict(n_rounds=nb, batches_per_round=1.0,
-                    sync_s=per_sync, update_s=0.0,
-                    sync_bytes=1.0 * G + (W - 1) * G,
-                    update_bytes=0 * G, **terms)
-    raise ValueError(arch)
+# the registry's dispatcher IS the implementation; this alias keeps the
+# historical name the sweeps and tests import
+_round_terms = arch_round_terms
 
 
 def round_plan(arch: str, *, n_params: int, compute_s_per_batch: float,
@@ -283,13 +198,9 @@ def _epoch_terms(*, n_rounds, batches_per_round, fetch_s,
                 comm_bytes=n_rounds * (sync_bytes + update_bytes))
 
 
-def _epoch_cost(arch, per_worker_s, ram_gb, n_workers):
-    """(cost_per_worker, total_cost); elementwise in the numeric args."""
-    if arch == "gpu":
-        cost_worker = pricing.gpu_cost(per_worker_s)
-    else:
-        cost_worker = pricing.lambda_cost(per_worker_s, ram_gb)
-    return cost_worker, cost_worker * n_workers
+# billing dispatch now lives on the ArchSpec (Lambda GB-seconds vs
+# instance-hours); alias kept for the sweeps and tests
+_epoch_cost = arch_epoch_cost
 
 
 def simulate_epoch(arch: str, *, n_params: int,
@@ -361,8 +272,17 @@ def paper_compute_anchor(arch: str, model: str = "mobilenet") -> float:
     the GPU baseline), so simulators anchored on Table 2 feed this as
     ``compute_s_per_batch``.  Shared by ``benchmarks/fault_tolerance``,
     ``benchmarks/pareto_sweep`` and the examples — one calibration,
-    one place."""
-    return PAPER_TABLE2[model][arch][0] * (0.9 if arch == "gpu" else 0.85)
+    one place.  Beyond-paper architectures calibrate through their
+    spec's ``anchor`` row (e.g. the SPIRT hybrids anchor on spirt) and
+    ``compute_share``."""
+    spec = get_arch(arch)
+    row = PAPER_TABLE2[model].get(spec.anchor or spec.name)
+    if row is None:
+        raise ValueError(
+            f"arch {arch!r} has no paper Table 2 calibration row; set "
+            f"ArchSpec.anchor to one of {tuple(PAPER_TABLE2[model])} to "
+            "use the anchored benchmarks")
+    return row[0] * spec.compute_share
 
 
 def paper_cost_check(model: str, arch: str) -> Dict[str, float]:

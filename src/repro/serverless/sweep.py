@@ -42,10 +42,11 @@ from typing import Callable, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.serverless.archs import get_arch
 from repro.serverless.autoscale import ReactiveAutoscaler
 from repro.serverless.faults import FaultPlan
-from repro.serverless.recovery import CheckpointRestore, PeerTakeover
-from repro.serverless.runtime import RuntimeReport, run_event_epoch
+from repro.serverless.runtime import (RuntimeReport, resolve_recovery,
+                                      run_event_epoch)
 from repro.serverless.traces import Trace
 from repro.serverless.simulator import (ARCHS, REDIS, Channel,
                                         ServerlessSetup, _epoch_cost,
@@ -59,11 +60,12 @@ def ram_scaled_compute(anchor_s_per_batch: float, *,
                        ref_ram_gb: float = 2.0) -> Callable[[str, float],
                                                             float]:
     """Lambda allocates vCPU proportionally to RAM, so per-batch compute
-    shrinks as the tier grows; the GPU baseline's compute is fixed by
-    the accelerator, not the tier.  Returns a compute model for
-    :class:`SweepGrid` anchored at ``ref_ram_gb``."""
+    shrinks as the tier grows; architectures whose spec clears
+    ``ram_scales_compute`` (the GPU baseline — compute fixed by the
+    accelerator, not the tier) keep the anchor.  Returns a compute
+    model for :class:`SweepGrid` anchored at ``ref_ram_gb``."""
     def model(arch: str, ram_gb: float) -> float:
-        if arch == "gpu":
+        if not get_arch(arch).ram_scales_compute:
             return anchor_s_per_batch
         return anchor_s_per_batch * (ref_ram_gb / ram_gb)
     return model
@@ -108,6 +110,7 @@ def iter_grid(grid: SweepGrid) -> Iterator[dict]:
     n_workers, ram, accumulation, significant_fraction with the last
     axis fastest)."""
     for arch in grid.archs:
+        spec = get_arch(arch)
         for ch in grid.channels:
             for W in grid.n_workers:
                 for ram in grid.ram_gb:
@@ -117,6 +120,7 @@ def iter_grid(grid: SweepGrid) -> Iterator[dict]:
                                 arch=arch, channel=ch, n_workers=W,
                                 ram_gb=ram, accumulation=acc,
                                 significant_fraction=sig,
+                                channel_pinned=spec.pins_channel(ch),
                                 compute_s_per_batch=grid.compute_for(
                                     arch, ram))
 
@@ -167,6 +171,11 @@ class AnalyticSweep:
     comm_bytes_per_worker: np.ndarray
     cost_per_worker: np.ndarray
     total_cost: np.ndarray
+    # True where the arch's pinned sync channel overrides the grid's
+    # channel label (e.g. gpu x redis: the sync numbers are S3's) —
+    # ISSUE 4 satellite: such points used to masquerade as channel
+    # comparisons
+    channel_pinned: np.ndarray
 
     def __len__(self) -> int:
         return len(self.per_worker_s)
@@ -180,13 +189,21 @@ class AnalyticSweep:
                     accumulation=int(self.accumulation[i]),
                     significant_fraction=float(
                         self.significant_fraction[i]),
+                    channel_pinned=bool(self.channel_pinned[i]),
                     compute_s_per_batch=float(self.compute_s_per_batch[i]),
                     per_worker_s=float(self.per_worker_s[i]),
                     total_cost=float(self.total_cost[i]))
 
-    def mask(self, arch: Optional[str] = None) -> np.ndarray:
-        return (np.ones(len(self), bool) if arch is None
-                else self.arch == arch)
+    def mask(self, arch: Optional[str] = None, *,
+             drop_pinned: bool = False) -> np.ndarray:
+        """Row selector.  ``drop_pinned=True`` removes the bogus
+        channel-comparison points (grid channel overridden by the
+        arch's pinned sync channel)."""
+        m = (np.ones(len(self), bool) if arch is None
+             else self.arch == arch)
+        if drop_pinned:
+            m = m & ~self.channel_pinned
+        return m
 
 
 def sweep_analytic(grid: SweepGrid) -> AnalyticSweep:
@@ -216,7 +233,9 @@ def sweep_analytic(grid: SweepGrid) -> AnalyticSweep:
            ("fetch_s", "compute_s", "sync_s", "update_s", "per_worker_s",
             "per_batch_s", "comm_bytes_per_worker", "cost_per_worker",
             "total_cost", "compute_s_per_batch")}
+    pinned_col = np.empty(N, bool)
     for ai, arch in enumerate(grid.archs):
+        spec = get_arch(arch)
         # compute model resolved once per (arch, RAM tier)
         comp = np.asarray([grid.compute_for(arch, r)
                            for r in ram_ax])[ram_ix]
@@ -241,6 +260,8 @@ def sweep_analytic(grid: SweepGrid) -> AnalyticSweep:
         cost_w, cost_t = _epoch_cost(arch, ep["per_worker"], ram, W)
         lo, hi = ai * n, (ai + 1) * n
         arch_col[lo:hi] = arch
+        pinned_col[lo:hi] = np.asarray(
+            [spec.pins_channel(c) for c in grid.channels])[ch_ix]
         out["compute_s_per_batch"][lo:hi] = comp
         out["fetch_s"][lo:hi] = ep["fetch"]
         out["compute_s"][lo:hi] = ep["compute"]
@@ -257,7 +278,8 @@ def sweep_analytic(grid: SweepGrid) -> AnalyticSweep:
                          n_workers=np.tile(W, tile),
                          ram_gb=np.tile(ram, tile),
                          accumulation=np.tile(acc, tile),
-                         significant_fraction=np.tile(sig, tile), **out)
+                         significant_fraction=np.tile(sig, tile),
+                         channel_pinned=pinned_col, **out)
 
 
 def pareto_front(costs: Sequence[float],
@@ -276,6 +298,41 @@ def pareto_front(costs: Sequence[float],
     return np.asarray(front, int)
 
 
+def knee_point(x: Sequence[float], y: Sequence[float]) -> int:
+    """Index (into the ORIGINAL arrays) of the maximum-curvature point
+    of ``y(x)`` — the ROADMAP's fault-rate knee: the rate beyond which
+    an architecture's cost overhead stops degrading gracefully.
+
+    Both axes are min-max normalized so the knee is scale-free, the
+    points are sorted by ``x``, and discrete curvature
+    ``|x'y'' - y'x''| / (x'^2 + y'^2)^{3/2}`` (central differences via
+    ``np.gradient``) is evaluated at every sample; endpoints are
+    excluded (their one-sided differences make them spurious argmaxes).
+    Degenerate inputs — fewer than 3 points, or an axis with no spread
+    — have no curvature anywhere and raise ``ValueError``.
+    """
+    x = np.asarray(x, float)
+    y = np.asarray(y, float)
+    if x.shape != y.shape or x.ndim != 1 or len(x) < 3:
+        raise ValueError("knee_point needs two equal-length 1-D arrays "
+                         f"of >= 3 points, got {x.shape} / {y.shape}")
+    order = np.argsort(x, kind="stable")
+    xs, ys = x[order], y[order]
+    x_span, y_span = xs[-1] - xs[0], ys.max() - ys.min()
+    if x_span <= 0 or y_span <= 0:
+        raise ValueError("knee_point needs spread on both axes "
+                         f"(x span {x_span}, y span {y_span})")
+    xn = (xs - xs[0]) / x_span
+    yn = (ys - ys.min()) / y_span
+    dx, dy = np.gradient(xn), np.gradient(yn)
+    d2x, d2y = np.gradient(dx), np.gradient(dy)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        k = np.abs(dx * d2y - dy * d2x) \
+            / np.maximum(dx * dx + dy * dy, 1e-300) ** 1.5
+    k[0] = k[-1] = -np.inf                  # interior points only
+    return int(order[int(np.argmax(k))])
+
+
 # ---------------------------------------------------------------------------
 # Layer 3: seeded multi-replicate event-engine sweep
 # ---------------------------------------------------------------------------
@@ -287,14 +344,21 @@ class FaultRates:
     byzantine_fraction: float = 0.0
     storm_prob: float = 0.0
 
+    def __post_init__(self):
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if v < 0:
+                raise ValueError(f"{f.name} must be >= 0, got {v}")
+
 
 @dataclasses.dataclass(frozen=True)
 class EventSweepPoint:
     """One event-engine configuration to replicate under random faults.
 
-    ``recovery="auto"`` maps to SPIRT's peer takeover for the spirt
-    architecture and checkpoint-restore for everything else (the
-    pairing ``benchmarks/fault_tolerance.py`` measures);
+    ``recovery="auto"`` resolves the architecture's own
+    :class:`~repro.serverless.archs.ArchSpec` default — peer takeover
+    for the in-DB SPIRT family, checkpoint-restore for everything else
+    (the pairing ``benchmarks/fault_tolerance.py`` measures);
     ``autoscale_max > 0`` attaches a :class:`ReactiveAutoscaler` with
     the given bounds.  A non-``None`` ``trace`` replays measured
     cold-start/straggler tails via :meth:`FaultPlan.from_trace` instead
@@ -342,12 +406,10 @@ def _replicate_seed(base_seed: int, point_idx: int, replicate: int) -> int:
 
 
 def _resolve_recovery(point: EventSweepPoint):
-    mode = point.recovery
-    if mode == "auto":
-        mode = "takeover" if point.arch == "spirt" else "restore"
-    if mode == "takeover":
-        return PeerTakeover()
-    return CheckpointRestore(checkpoint_every=point.checkpoint_every)
+    # one shared string -> policy mapping (runtime.resolve_recovery);
+    # "auto" resolves the ArchSpec's own recovery design
+    return resolve_recovery(point.arch, point.recovery,
+                            checkpoint_every=point.checkpoint_every)
 
 
 def run_point_replicate(point: EventSweepPoint, rates: FaultRates,
@@ -394,8 +456,17 @@ def run_point_replicate(point: EventSweepPoint, rates: FaultRates,
 
 def _run_point_job(job) -> List[Tuple[float, float, float]]:
     """Worker-process entry: all replicates of one point.  Module-level
-    so it pickles under ProcessPoolExecutor."""
-    point, rates, seeds, horizon_s, base_makespan, trace = job
+    so it pickles under ProcessPoolExecutor.  The point's ArchSpec
+    rides along and is re-registered on arrival: spawned workers
+    re-import the package with only the built-in registrations, so a
+    caller-registered architecture (examples/custom_arch.py) would
+    otherwise be unknown in the child."""
+    point, spec, rates, seeds, horizon_s, base_makespan, trace = job
+    from repro.serverless.archs import register_arch
+    # unconditional overwrite: the parent's registration (including an
+    # overwrite=True replacement of a built-in) must win over whatever
+    # the child's fresh import registered
+    register_arch(spec, overwrite=True)
     out = []
     for s in seeds:
         rep = run_point_replicate(point, rates, s, horizon_s, trace=trace)
@@ -429,8 +500,8 @@ def sweep_events(points: Sequence[EventSweepPoint], *,
                               accumulation=p.accumulation)
         seeds = tuple(_replicate_seed(seed, i, r)
                       for r in range(n_replicates))
-        jobs.append((p, rates, seeds, base.per_worker_s, base.per_worker_s,
-                     trace))
+        jobs.append((p, get_arch(p.arch), rates, seeds, base.per_worker_s,
+                     base.per_worker_s, trace))
         bases.append(base)
     if processes is None:
         processes = min(os.cpu_count() or 1, 8)

@@ -1,0 +1,216 @@
+"""Golden-snapshot fingerprints for the serverless simulator stack.
+
+ISSUE 4's hard constraint is bit-exactness: the registry refactor
+(``repro.serverless.archs``) must leave every number the five paper
+architectures produce — scalar ``EpochReport``, vectorized analytic
+sweep columns, and event-engine ``RuntimeReport`` under every
+fault/recovery scenario — byte-identical.  This module defines the
+scenario matrix and a lossless fingerprint (floats serialized via
+``float.hex``, arrays via sha256 of their raw bytes), shared by
+
+  * the one-shot capture run that snapshotted current ``main`` into
+    ``tests/golden/serverless_golden.json`` (run as
+    ``PYTHONPATH=src python tests/golden_utils.py``), and
+  * ``tests/test_golden_parity.py``, which recomputes the fingerprints
+    and asserts exact equality against the snapshot.
+
+Every scenario passes an EXPLICIT recovery policy: the snapshot pins
+engine arithmetic, not default-resolution policy (which the registry
+refactor deliberately makes arch-aware).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+
+import numpy as np
+
+from repro.serverless import (ByzantineWorker, CheckpointRestore,
+                              ColdStartStorm, FaultPlan, PeerTakeover,
+                              ReactiveAutoscaler, S3, ServerlessSetup,
+                              Straggler, WorkerCrash, lambda_default,
+                              run_event_epoch, simulate_epoch)
+from repro.serverless.sweep import SweepGrid, ram_scaled_compute, \
+    sweep_analytic
+from repro.serverless.simulator import REDIS
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "serverless_golden.json")
+PAPER_ARCHS = ("spirt", "mlless", "scatterreduce", "allreduce", "gpu")
+N_PARAMS = int(4.2e6)
+
+# analytic-sweep columns that predate the registry (new columns the
+# refactor adds are additive and not part of the frozen snapshot)
+SWEEP_COLUMNS = ("arch", "channel_idx", "n_workers", "ram_gb",
+                 "accumulation", "significant_fraction",
+                 "compute_s_per_batch", "fetch_s", "compute_s", "sync_s",
+                 "update_s", "per_worker_s", "per_batch_s",
+                 "comm_bytes_per_worker", "cost_per_worker", "total_cost")
+
+
+def _hex(x) -> str:
+    """Lossless scalar encoding (floats via hex, ints verbatim)."""
+    if isinstance(x, (bool, np.bool_)):
+        return str(bool(x))
+    if isinstance(x, (int, np.integer)):
+        return str(int(x))
+    return float(x).hex()
+
+
+def epoch_fingerprint(rep) -> dict:
+    return {
+        "arch": rep.arch,
+        "per_batch_s": _hex(rep.per_batch_s),
+        "per_worker_s": _hex(rep.per_worker_s),
+        "total_time_s": _hex(rep.total_time_s),
+        "stages": {k: _hex(getattr(rep.stages, k))
+                   for k in ("fetch", "compute", "sync", "update")},
+        "comm_bytes_per_worker": _hex(rep.comm_bytes_per_worker),
+        "cost_per_worker": _hex(rep.cost_per_worker),
+        "total_cost": _hex(rep.total_cost),
+        "ram_gb": _hex(rep.ram_gb),
+    }
+
+
+def runtime_fingerprint(rep) -> dict:
+    return {
+        "arch": rep.arch,
+        "makespan_s": _hex(rep.makespan_s),
+        "analytic_s": _hex(rep.analytic_s),
+        "rounds": rep.rounds,
+        "work_done_batches": _hex(rep.work_done_batches),
+        "n_workers_start": rep.n_workers_start,
+        "n_workers_peak": rep.n_workers_peak,
+        "n_workers_end": rep.n_workers_end,
+        "total_cost": _hex(rep.total_cost),
+        "stage_totals": {k: _hex(v)
+                         for k, v in sorted(rep.stage_totals.items())},
+        "recoveries": [[r.worker, _hex(r.crash_time_s),
+                        _hex(r.rejoined_time_s), r.mode]
+                       for r in rep.recoveries],
+        "poisoned_updates": rep.poisoned_updates,
+        "masked_updates": rep.masked_updates,
+        "scale_events": [[_hex(t), int(d)] for t, d in rep.scale_events],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Scenario matrix
+# ---------------------------------------------------------------------------
+def epoch_scenarios():
+    """(name, simulate_epoch kwargs sans arch) — scalar analytic path."""
+    return {
+        "default": dict(n_params=N_PARAMS, compute_s_per_batch=0.9,
+                        setup=ServerlessSetup()),
+        "s3_w8": dict(n_params=N_PARAMS, compute_s_per_batch=0.9,
+                      setup=ServerlessSetup(n_workers=8, ram_gb=3.0,
+                                            channel=S3),
+                      accumulation=8, significant_fraction=0.1),
+        "small": dict(n_params=N_PARAMS, compute_s_per_batch=1.7,
+                      setup=ServerlessSetup(n_workers=2, ram_gb=1.0),
+                      significant_fraction=0.5),
+    }
+
+
+def runtime_scenarios():
+    """(name, run_event_epoch kwargs sans arch) — event engine.  Every
+    crash scenario names its recovery policy explicitly (see module
+    docstring)."""
+    crash = FaultPlan(crashes=(WorkerCrash(1, 30.0),))
+    strag = FaultPlan(stragglers=(Straggler(2, slowdown=4.0),))
+    mixed = FaultPlan.random(seed=3, n_workers=4, horizon_s=120.0,
+                             crash_rate=0.5, straggler_rate=0.5,
+                             byzantine_fraction=0.25, storm_prob=0.5)
+    traced = FaultPlan.from_trace(lambda_default(), seed=5, n_workers=4,
+                                  horizon_s=120.0, base_cold_start_s=2.5,
+                                  crash_rate=0.3)
+    base = dict(n_params=N_PARAMS, compute_s_per_batch=0.9,
+                setup=ServerlessSetup())
+    s3 = dict(n_params=N_PARAMS, compute_s_per_batch=0.9,
+              setup=ServerlessSetup(n_workers=8, ram_gb=3.0, channel=S3))
+    return {
+        "fault_free": dict(base),
+        "crash_restore": dict(base, faults=crash,
+                              recovery=CheckpointRestore(
+                                  checkpoint_every=4)),
+        "crash_takeover": dict(base, faults=crash,
+                               recovery=PeerTakeover()),
+        "straggler": dict(base, faults=strag,
+                          recovery=CheckpointRestore()),
+        "storm": dict(base,
+                      faults=FaultPlan(storm=ColdStartStorm(
+                          extra_s=8.0, fraction=0.5), seed=7),
+                      recovery=CheckpointRestore()),
+        "byzantine_masked": dict(base,
+                                 faults=FaultPlan(byzantine=(
+                                     ByzantineWorker(0),)),
+                                 recovery=CheckpointRestore(),
+                                 robust_trim=1),
+        "random_mix_restore": dict(base, faults=mixed,
+                                   recovery=CheckpointRestore(),
+                                   robust_trim=1),
+        "random_mix_takeover": dict(base, faults=mixed,
+                                    recovery=PeerTakeover(),
+                                    robust_trim=1),
+        "trace_replay": dict(base, faults=traced,
+                             recovery=CheckpointRestore(
+                                 checkpoint_every=3)),
+        "autoscaled_straggler": dict(
+            base, faults=strag, recovery=CheckpointRestore(),
+            autoscaler=ReactiveAutoscaler(min_workers=1, max_workers=8)),
+        "s3_crash_restore": dict(
+            s3, faults=FaultPlan(crashes=(WorkerCrash(3, 20.0),)),
+            recovery=CheckpointRestore(checkpoint_every=4)),
+    }
+
+
+def golden_sweep_grid() -> SweepGrid:
+    return SweepGrid(n_params=N_PARAMS,
+                     compute_s_per_batch=ram_scaled_compute(0.9),
+                     archs=PAPER_ARCHS, n_workers=(2, 4, 8),
+                     ram_gb=(1.0, 2.0, 3.0), channels=(REDIS, S3),
+                     accumulation=(8, 24),
+                     significant_fraction=(0.1, 0.3))
+
+
+def sweep_fingerprint() -> dict:
+    """Per-column sha256 over the raw bytes + first/last values in hex
+    (the spot values make diffs debuggable when a hash moves)."""
+    vec = sweep_analytic(golden_sweep_grid())
+    out = {"n_points": len(vec)}
+    for col in SWEEP_COLUMNS:
+        a = getattr(vec, col)
+        arr = np.asarray(a)
+        spots = ([str(arr[0]), str(arr[-1])] if arr.dtype.kind == "U"
+                 else [_hex(arr[0]), _hex(arr[-1])])
+        out[col] = {"sha256": hashlib.sha256(arr.tobytes()).hexdigest(),
+                    "first_last": spots}
+    return out
+
+
+def collect() -> dict:
+    golden = {"epoch": {}, "runtime": {}, "sweep": sweep_fingerprint()}
+    for arch in PAPER_ARCHS:
+        golden["epoch"][arch] = {
+            name: epoch_fingerprint(simulate_epoch(arch, **kw))
+            for name, kw in epoch_scenarios().items()}
+        golden["runtime"][arch] = {
+            name: runtime_fingerprint(run_event_epoch(arch, **kw))
+            for name, kw in runtime_scenarios().items()}
+    return golden
+
+
+def main():
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    golden = collect()
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(golden, f, indent=1, sort_keys=True)
+    n = sum(len(v) for v in golden["epoch"].values()) \
+        + sum(len(v) for v in golden["runtime"].values())
+    print(f"wrote {GOLDEN_PATH}: {n} report fingerprints "
+          f"+ {golden['sweep']['n_points']}-point sweep")
+
+
+if __name__ == "__main__":
+    main()

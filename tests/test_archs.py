@@ -1,0 +1,410 @@
+"""Registry contract + the satellites that ride ISSUE 4's refactor:
+the gpu channel-pin fix, setup/rate validation, knee detection, and the
+two beyond-paper hybrids flowing through every layer from a single
+``archs.py`` registration.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.serverless import (ARCHS, ArchSpec, CheckpointRestore,
+                              EventSweepPoint, FaultPlan, FaultRates,
+                              PeerTakeover, ServerlessSetup, SweepGrid,
+                              default_recovery, get_arch, knee_point,
+                              list_archs, register_arch, run_event_epoch,
+                              simulate_epoch, sweep_analytic, sweep_events,
+                              unregister_arch)
+from repro.serverless.archs import _transfer
+from repro.serverless.simulator import REDIS, S3, round_plan
+from repro.serverless.sweep import _resolve_recovery, iter_grid, \
+    scalar_sweep
+from repro.serverless.traces import lambda_default
+
+N_PARAMS = int(4.2e6)
+HYBRIDS = ("hier_spirt", "spirt_s3")
+
+
+# ---------------------------------------------------------------------------
+# registry contract
+# ---------------------------------------------------------------------------
+def test_paper_archs_unchanged():
+    assert ARCHS == ("spirt", "mlless", "scatterreduce", "allreduce",
+                     "gpu")
+    assert all(get_arch(a).paper for a in ARCHS)
+
+
+def test_list_archs_includes_hybrids_after_paper_five():
+    names = list_archs()
+    assert names[:5] == ARCHS
+    for h in HYBRIDS:
+        assert h in names and not get_arch(h).paper
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(ValueError, match="unknown architecture"):
+        get_arch("does_not_exist")
+    with pytest.raises(ValueError, match="unknown architecture"):
+        simulate_epoch("does_not_exist", n_params=N_PARAMS,
+                       compute_s_per_batch=0.9)
+
+
+def test_duplicate_registration_raises():
+    with pytest.raises(ValueError, match="already registered"):
+        register_arch(get_arch("spirt"))
+    # overwrite=True is the explicit escape hatch
+    register_arch(get_arch("spirt"), overwrite=True)
+
+
+def test_register_unregister_roundtrip():
+    spec = dataclasses.replace(get_arch("allreduce"),
+                               name="_test_arch", paper=False)
+    register_arch(spec)
+    try:
+        assert "_test_arch" in list_archs()
+        a = simulate_epoch("_test_arch", n_params=N_PARAMS,
+                           compute_s_per_batch=0.9)
+        b = simulate_epoch("allreduce", n_params=N_PARAMS,
+                           compute_s_per_batch=0.9)
+        assert a.per_worker_s == b.per_worker_s
+        assert a.total_cost == b.total_cost
+    finally:
+        unregister_arch("_test_arch")
+    assert "_test_arch" not in list_archs()
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_every_spec_roundtrips_plan_to_event_runtime(arch):
+    """round_plan -> EventRuntime must reduce to the analytic epoch for
+    EVERY registered spec (the simulate_epoch fast-path contract)."""
+    ana = simulate_epoch(arch, n_params=N_PARAMS, compute_s_per_batch=0.9)
+    rep = run_event_epoch(arch, n_params=N_PARAMS,
+                          compute_s_per_batch=0.9)
+    assert rep.makespan_s == pytest.approx(ana.per_worker_s, rel=1e-9)
+    assert rep.total_cost == pytest.approx(ana.total_cost, rel=1e-9)
+    plan = round_plan(arch, n_params=N_PARAMS, compute_s_per_batch=0.9)
+    assert plan.n_rounds >= 1 and plan.total_batches == 24
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_default_recovery_follows_spec(arch):
+    spec = get_arch(arch)
+    pol = default_recovery(arch)
+    want = PeerTakeover if spec.default_recovery == "takeover" \
+        else CheckpointRestore
+    assert isinstance(pol, want)
+    point = EventSweepPoint(arch=arch, n_params=N_PARAMS,
+                            compute_s_per_batch=0.9)
+    assert isinstance(_resolve_recovery(point), want)
+
+
+def test_spirt_family_defaults_to_takeover():
+    for arch in ("spirt", "hier_spirt", "spirt_s3"):
+        assert get_arch(arch).default_recovery == "takeover"
+    assert get_arch("allreduce").default_recovery == "restore"
+
+
+def test_sweep_rejects_unknown_recovery_string():
+    point = EventSweepPoint(arch="allreduce", n_params=N_PARAMS,
+                            compute_s_per_batch=0.9, recovery="takeovr")
+    with pytest.raises(ValueError, match="unknown recovery"):
+        _resolve_recovery(point)
+
+
+def test_arch_spec_validates_default_recovery():
+    with pytest.raises(ValueError, match="default_recovery"):
+        dataclasses.replace(get_arch("spirt"), name="_bad",
+                            default_recovery="peer_takeover")
+
+
+def test_custom_arch_survives_spawned_sweep_workers():
+    """Caller-registered specs must reach spawn-based sweep workers
+    (the job carries the spec and the child re-registers it) — the
+    extension point's multiprocessing contract."""
+    spec = dataclasses.replace(get_arch("allreduce"),
+                               name="_spawned_arch", paper=False)
+    register_arch(spec)
+    try:
+        points = [EventSweepPoint(arch="_spawned_arch",
+                                  n_params=N_PARAMS,
+                                  compute_s_per_batch=0.9, label=str(i))
+                  for i in range(2)]
+        multi = sweep_events(points, rates=FaultRates(crash_rate=0.5),
+                             n_replicates=2, seed=3, processes=2)
+        inline = sweep_events(points, rates=FaultRates(crash_rate=0.5),
+                              n_replicates=2, seed=3, processes=1)
+        for a, b in zip(multi, inline):
+            assert a.makespan_mean_s == b.makespan_mean_s
+            assert a.cost_mean == b.cost_mean
+    finally:
+        unregister_arch("_spawned_arch")
+
+
+def test_overwritten_builtin_spec_reaches_spawn_workers():
+    """A parent-side overwrite=True replacement of a built-in spec must
+    win over the child's fresh-import registration too."""
+    from repro.serverless.archs import instance_fleet_cost
+    original = get_arch("allreduce")
+    register_arch(dataclasses.replace(original,
+                                      fleet_cost=instance_fleet_cost),
+                  overwrite=True)
+    try:
+        points = [EventSweepPoint(arch="allreduce", n_params=N_PARAMS,
+                                  compute_s_per_batch=0.9, label=str(i))
+                  for i in range(2)]
+        multi = sweep_events(points, n_replicates=2, seed=3, processes=2)
+        inline = sweep_events(points, n_replicates=2, seed=3,
+                              processes=1)
+        for a, b in zip(multi, inline):
+            assert a.cost_mean == b.cost_mean     # both use the override
+    finally:
+        register_arch(original, overwrite=True)
+
+
+def test_anchorless_spec_gets_clear_calibration_error():
+    """A third-party spec without a Table-2 anchor must fail the
+    anchored benchmarks with an actionable error, not a bare
+    KeyError."""
+    from repro.serverless.simulator import paper_compute_anchor
+    spec = dataclasses.replace(get_arch("allreduce"),
+                               name="_no_anchor", paper=False)
+    register_arch(spec)
+    try:
+        with pytest.raises(ValueError, match="ArchSpec.anchor"):
+            paper_compute_anchor("_no_anchor")
+    finally:
+        unregister_arch("_no_anchor")
+
+
+def test_self_referential_jax_strategy_rejected():
+    """jax_strategy naming the spec itself would make get_strategy
+    recurse forever; make_strategy must fail fast instead."""
+    spec = dataclasses.replace(get_arch("allreduce"), name="_selfref",
+                               paper=False, jax_strategy="_selfref")
+    register_arch(spec)
+    try:
+        with pytest.raises(ValueError, match="names itself"):
+            spec.make_strategy()
+    finally:
+        unregister_arch("_selfref")
+
+
+def test_run_event_epoch_accepts_recovery_strings():
+    from repro.serverless import WorkerCrash
+    kw = dict(n_params=N_PARAMS, compute_s_per_batch=0.9,
+              faults=FaultPlan(crashes=(WorkerCrash(1, 10.0),)))
+    by_str = run_event_epoch("allreduce", recovery="takeover", **kw)
+    by_obj = run_event_epoch("allreduce", recovery=PeerTakeover(), **kw)
+    assert by_str.makespan_s == by_obj.makespan_s
+    assert [r.mode for r in by_str.recoveries] == ["takeover"]
+    assert [r.mode
+            for r in run_event_epoch("allreduce", recovery="restore",
+                                     **kw).recoveries] == ["restore"]
+    with pytest.raises(ValueError, match="unknown recovery"):
+        run_event_epoch("allreduce", recovery="bogus", **kw)
+
+
+def test_spec_names_jax_strategy():
+    """Sim arch and real-training arch are one object: get_strategy
+    resolves arch names through the registry."""
+    pytest.importorskip("jax")
+    from repro.core import get_strategy
+    assert get_strategy("gpu").name == "allreduce"
+    assert get_strategy("hier_spirt").name == "spirt"
+    assert get_strategy("hier_spirt").microbatches == 4
+    with pytest.raises(KeyError):
+        get_strategy("no_such_strategy")
+
+
+@pytest.mark.parametrize("arch,want", [("spirt", "spirt"),
+                                       ("mlless", "mlless"),
+                                       ("scatterreduce", "scatterreduce"),
+                                       ("allreduce", "parameter_server"),
+                                       ("gpu", "allreduce"),
+                                       ("hier_spirt", "spirt"),
+                                       ("spirt_s3", "spirt")])
+def test_make_strategy_works_for_every_shipped_spec(arch, want):
+    """Specs whose jax_strategy shares the arch name (spirt, mlless,
+    scatterreduce back concrete STRATEGIES entries) must build fine —
+    the self-reference guard only rejects names that would re-enter
+    the registry."""
+    pytest.importorskip("jax")
+    assert get_arch(arch).make_strategy().name == want
+
+
+# ---------------------------------------------------------------------------
+# satellite: gpu channel pin (silent no-op channel axis fix)
+# ---------------------------------------------------------------------------
+def test_pinned_channel_marks_bogus_grid_points():
+    """gpu x redis sweeps used to report Redis labels with S3 sync
+    numbers; the spec's pin now marks them."""
+    grid = SweepGrid(n_params=N_PARAMS, compute_s_per_batch=0.9,
+                     archs=("allreduce", "gpu", "spirt_s3"),
+                     channels=(REDIS, S3))
+    vec = sweep_analytic(grid)
+    for i in range(len(vec)):
+        p = vec.point(i)
+        spec = get_arch(p["arch"])
+        assert p["channel_pinned"] == spec.pins_channel(p["channel"]), p
+    # allreduce genuinely varies by channel -> never marked
+    assert not vec.channel_pinned[vec.mask("allreduce")].any()
+    # gpu/spirt_s3: exactly the redis-labelled half is marked...
+    for arch in ("gpu", "spirt_s3"):
+        m = vec.mask(arch)
+        assert vec.channel_pinned[m].sum() == m.sum() // 2
+        # ...and its sync numbers equal the honestly-labelled S3 row's
+        redis_rows = m & vec.channel_pinned
+        s3_rows = m & ~vec.channel_pinned
+        np.testing.assert_array_equal(vec.sync_s[redis_rows],
+                                      vec.sync_s[s3_rows])
+        # drop_pinned removes exactly the marked rows
+        assert (vec.mask(arch, drop_pinned=True) == s3_rows).all()
+    # iter_grid carries the same flag, in the same layout
+    flags = [p["channel_pinned"] for p in iter_grid(grid)]
+    np.testing.assert_array_equal(flags, vec.channel_pinned)
+
+
+def test_pinned_sync_identical_across_channels_end_to_end():
+    for arch in ("gpu", "spirt_s3"):
+        a = simulate_epoch(arch, n_params=N_PARAMS,
+                           compute_s_per_batch=0.9,
+                           setup=ServerlessSetup(channel=REDIS))
+        b = simulate_epoch(arch, n_params=N_PARAMS,
+                           compute_s_per_batch=0.9,
+                           setup=ServerlessSetup(channel=S3))
+        assert a.stages.sync == b.stages.sync, arch
+
+
+# ---------------------------------------------------------------------------
+# satellite: setup / rate validation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kw", [dict(n_workers=0), dict(n_workers=-3),
+                                dict(batches_per_worker=0),
+                                dict(ram_gb=0.0), dict(ram_gb=-1.0),
+                                dict(cold_start_s=-0.1),
+                                dict(model_bytes=-1.0),
+                                dict(minibatch_bytes=-8.0)])
+def test_serverless_setup_rejects_invalid(kw):
+    with pytest.raises(ValueError):
+        ServerlessSetup(**kw)
+
+
+@pytest.mark.parametrize("kw", [dict(crash_rate=-0.1),
+                                dict(straggler_rate=-1.0),
+                                dict(byzantine_fraction=-0.5),
+                                dict(storm_prob=-0.01)])
+def test_fault_rates_reject_negative(kw):
+    with pytest.raises(ValueError):
+        FaultRates(**kw)
+
+
+def test_valid_boundaries_accepted():
+    ServerlessSetup(n_workers=1, batches_per_worker=1, ram_gb=0.125,
+                    cold_start_s=0.0)
+    FaultRates()                    # all-zero is the fault-free default
+    FaultRates(crash_rate=1.0, byzantine_fraction=2.0)  # clamped later
+
+
+# ---------------------------------------------------------------------------
+# satellite: knee detection
+# ---------------------------------------------------------------------------
+def test_knee_point_finds_the_bend():
+    x = np.linspace(0.0, 1.0, 11)
+    # flat until 0.6, then a sharp linear take-off: the knee is the bend
+    y = np.where(x <= 0.6, 0.01 * x, 0.01 * x + 8.0 * (x - 0.6))
+    k = knee_point(x, y)
+    assert x[k] == pytest.approx(0.6, abs=0.101)
+    # order-invariant: indexes back into the ORIGINAL array
+    perm = np.random.RandomState(0).permutation(len(x))
+    k2 = knee_point(x[perm], y[perm])
+    assert x[perm][k2] == x[k]
+
+
+def test_knee_point_rejects_degenerate_inputs():
+    with pytest.raises(ValueError):
+        knee_point([0.0, 1.0], [0.0, 1.0])           # too few points
+    with pytest.raises(ValueError):
+        knee_point([0, 1, 2], [1.0, 1.0, 1.0])       # flat y
+    with pytest.raises(ValueError):
+        knee_point([1, 1, 1], [0.0, 0.5, 1.0])       # no x spread
+
+
+# ---------------------------------------------------------------------------
+# hybrids: defined solely in archs.py, present at every layer
+# ---------------------------------------------------------------------------
+def test_hybrids_flow_through_analytic_sweep():
+    grid = SweepGrid(n_params=N_PARAMS, compute_s_per_batch=0.9,
+                     archs=list_archs(), n_workers=(4, 16))
+    vec = sweep_analytic(grid)
+    sca = scalar_sweep(grid)
+    for i, rep in enumerate(sca):        # vectorized == scalar, 7 archs
+        assert vec.per_worker_s[i] == rep.per_worker_s, i
+        assert vec.total_cost[i] == rep.total_cost, i
+    for h in HYBRIDS:
+        assert vec.mask(h).sum() == 2
+
+
+def test_hier_spirt_flattens_sync_wall_at_scale():
+    """The hierarchy's point: cross-group chunk exchange beats flat
+    SPIRT's (W-1) full-gradient fan-in once the fleet is large."""
+    def sync(arch, W):
+        return simulate_epoch(
+            arch, n_params=N_PARAMS, compute_s_per_batch=0.9,
+            setup=ServerlessSetup(n_workers=W)).stages.sync
+    assert sync("hier_spirt", 16) < sync("spirt", 16)
+    assert sync("hier_spirt", 64) < 0.5 * sync("spirt", 64)
+
+
+def test_spirt_s3_isolates_redis_premium():
+    """Same semantics as spirt, gradient path pinned to S3: slower sync
+    at equal fetch/compute — the Redis premium, isolated."""
+    a = simulate_epoch("spirt", n_params=N_PARAMS,
+                       compute_s_per_batch=0.9)
+    b = simulate_epoch("spirt_s3", n_params=N_PARAMS,
+                       compute_s_per_batch=0.9)
+    assert b.stages.sync > a.stages.sync
+    assert b.stages.fetch == a.stages.fetch
+    assert b.stages.compute == a.stages.compute
+
+
+@pytest.mark.parametrize("arch", HYBRIDS)
+def test_hybrids_flow_through_event_sweep_with_trace(arch):
+    stats = sweep_events(
+        [EventSweepPoint(arch=arch, n_params=N_PARAMS,
+                         compute_s_per_batch=0.9)],
+        rates=FaultRates(crash_rate=0.5), trace=lambda_default(),
+        n_replicates=3, seed=11, processes=1)
+    s = stats[0]
+    assert s.makespan_mean_s >= s.analytic_makespan_s
+    # deterministic from (points, trace, seed)
+    again = sweep_events(
+        [EventSweepPoint(arch=arch, n_params=N_PARAMS,
+                         compute_s_per_batch=0.9)],
+        rates=FaultRates(crash_rate=0.5), trace=lambda_default(),
+        n_replicates=3, seed=11, processes=1)[0]
+    assert again.makespan_mean_s == s.makespan_mean_s
+    assert again.cost_mean == s.cost_mean
+
+
+def test_hybrid_crash_recovers_via_takeover():
+    from repro.serverless import WorkerCrash
+    rep = run_event_epoch(
+        "hier_spirt", n_params=N_PARAMS, compute_s_per_batch=0.9,
+        faults=FaultPlan(crashes=(WorkerCrash(1, 10.0),)),
+        recovery="auto")
+    assert [r.mode for r in rep.recoveries] == ["takeover"]
+    assert rep.n_workers_end == 3
+
+
+def test_elementwise_term_contract():
+    """A spec's round_terms must accept arrays (the vectorized sweep's
+    calling convention) — probe the hybrids directly."""
+    W = np.array([2, 4, 8, 16])
+    for arch in HYBRIDS:
+        t = get_arch(arch).round_terms(
+            G=_transfer(0, 1, 0) + 16.8e6, W=W, bw=1.25e9, lat=0.002,
+            sync_bw=1.25e9, sync_lat=0.002, nb=24,
+            significant_fraction=0.3, accumulation=24)
+        assert np.shape(t["sync_s"]) == W.shape
+        assert (np.diff(np.broadcast_to(t["sync_bytes"], W.shape))
+                >= 0).all()

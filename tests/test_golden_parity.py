@@ -1,0 +1,47 @@
+"""ISSUE 4 hard constraint: the ArchSpec registry refactor must be
+bit-exact for the five paper architectures.
+
+``tests/golden/serverless_golden.json`` was captured from the
+pre-registry ``main`` (see ``tests/golden_utils.py``, which defines the
+scenario matrix and the lossless fingerprints — floats via
+``float.hex``, sweep columns via sha256 of their raw bytes).  These
+tests recompute every fingerprint through today's code and assert EXACT
+equality: scalar ``EpochReport``s, the vectorized analytic sweep, and
+event-engine ``RuntimeReport``s across crash/straggler/storm/byzantine/
+trace/autoscale scenarios under both recovery policies.
+"""
+import json
+
+import pytest
+
+import golden_utils as gu
+from repro.serverless import run_event_epoch, simulate_epoch
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(gu.GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("arch", gu.PAPER_ARCHS)
+@pytest.mark.parametrize("scenario", sorted(gu.epoch_scenarios()))
+def test_epoch_reports_bit_identical(golden, arch, scenario):
+    kw = gu.epoch_scenarios()[scenario]
+    fp = gu.epoch_fingerprint(simulate_epoch(arch, **kw))
+    assert fp == golden["epoch"][arch][scenario]
+
+
+@pytest.mark.parametrize("arch", gu.PAPER_ARCHS)
+@pytest.mark.parametrize("scenario", sorted(gu.runtime_scenarios()))
+def test_runtime_reports_bit_identical(golden, arch, scenario):
+    kw = gu.runtime_scenarios()[scenario]
+    fp = gu.runtime_fingerprint(run_event_epoch(arch, **kw))
+    assert fp == golden["runtime"][arch][scenario]
+
+
+def test_vectorized_sweep_columns_bit_identical(golden):
+    fresh = gu.sweep_fingerprint()
+    assert fresh["n_points"] == golden["sweep"]["n_points"]
+    for col in gu.SWEEP_COLUMNS:
+        assert fresh[col] == golden["sweep"][col], col
