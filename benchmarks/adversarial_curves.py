@@ -1,0 +1,332 @@
+"""Adversarial-fraction degradation curves (the ROADMAP's last
+PR-1-era open item).
+
+Three sections, recorded in ``BENCH_adversarial.json`` (plus a
+matplotlib-gated chart):
+
+  1. *sim* — the full byzantine-fraction x attack-model x aggregator
+     surface on the deterministic quadratic-loss path
+     (``repro.serverless.sweep.adversarial_sweep``), with the paper's
+     qualitative claims asserted quantitatively: plain averaging
+     degrades monotonically (censored convergence step) as the
+     byzantine fraction grows 0 -> (W-1)/2W under every attack, while
+     trimmed-mean / coordinate-median / Krum / geometric-median hold a
+     bounded robustness floor up to each statistic's theoretical
+     breakdown budget — and collapse beyond it (visible for Krum past
+     ``f = (W-3)/2`` under the colluding little-is-enough attack).
+  2. *arch* — per registered architecture, the degradation curve under
+     its :class:`~repro.serverless.archs.ArchSpec.default_aggregator`:
+     the SPIRT family's in-database trimmed mean holds the floor where
+     every plain-averaging architecture diverges.
+  3. *jax* — the real-training rows: MobileNet, 4-way data-parallel,
+     worker 0 byzantine for the whole run via the refactored
+     ``repro.launch.byzantine_train`` (any attack x any aggregator).
+     Reproduces PR 1's converges-under-attack result for at least two
+     attack models, with plain averaging under the same attack as the
+     diverging control.
+
+Rows: adversarial/<section>/<name>,value,notes
+Usage:
+    PYTHONPATH=src python -m benchmarks.adversarial_curves [--quick]
+        [--only sim|arch|jax] [--skip-jax]
+        [--json BENCH_adversarial.json] [--chart adversarial_curves.png]
+    PYTHONPATH=src python -m benchmarks.run --only adversarial
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.launch import byzantine_train
+from repro.serverless import get_arch, list_archs
+from repro.serverless.adversarial import sim_aggregator_max_f
+from repro.serverless.sweep import (AdversarialGrid, adversarial_curve,
+                                    adversarial_sweep)
+
+SECTIONS = ("sim", "arch", "jax")
+#: the strong attacks whose end-of-ladder degradation must dwarf the
+#: fraction-0 baseline; little_is_enough is STEALTHY by design (it
+#: hides inside the honest spread and only shifts the mean steadily),
+#: and zero/sign_flip merely slow plain averaging down
+STRONG_ATTACKS = ("scale", "gaussian_noise")
+ROBUST = ("trimmed_mean", "coordinate_median", "krum",
+          "geometric_median")
+
+
+def _grid(quick: bool, **overrides) -> AdversarialGrid:
+    base = dict(n_workers=8, steps=60) if quick \
+        else dict(n_workers=12, steps=80)
+    base.update(overrides)
+    return AdversarialGrid(**base)
+
+
+def _censored_steps(cells, grid, aggregator, attack):
+    fr, cs = adversarial_curve(cells, aggregator, attack,
+                               "converged_step")
+    return fr, np.where(cs < 0, grid.steps + 1, cs).astype(int)
+
+
+def bench_sim(csv_rows, quick: bool) -> dict:
+    grid = _grid(quick)
+    t0 = time.perf_counter()
+    cells = adversarial_sweep(grid, seed=0)
+    elapsed = time.perf_counter() - t0
+    assert cells == adversarial_sweep(grid, seed=0), \
+        "adversarial_sweep is not bit-reproducible from (grid, seed)"
+    csv_rows.append(("adversarial/sim/cells", len(cells),
+                     f"W={grid.n_workers} steps={grid.steps} "
+                     f"{elapsed:.3f}s"))
+
+    curves = {}
+    breakdown = {}
+    for agg in grid.resolved_aggregators():
+        cap = sim_aggregator_max_f(agg, grid.n_workers)
+        for attack in sorted({c.attack for c in cells}):
+            fr, dist = adversarial_curve(cells, agg, attack)
+            _, steps = _censored_steps(cells, grid, agg, attack)
+            curves[f"{agg}/{attack}"] = dict(
+                fractions=fr.tolist(), final_dist=dist.tolist(),
+                converged_step=steps.tolist(), max_f=cap)
+            # first swept fraction whose cell left the bounded floor
+            broke = next((float(f) for f, d in zip(fr, dist)
+                          if d > 2 * grid.converge_tol), None)
+            breakdown[f"{agg}/{attack}"] = broke
+            csv_rows.append((
+                f"adversarial/sim/{agg}/{attack}/final_dist_at_max",
+                float(dist[-1]),
+                f"frac={fr[-1]:.3f} breakdown_frac={broke}"))
+
+    # the paper's qualitative ordering, asserted quantitatively --------
+    floor = 2 * grid.converge_tol
+    for attack in sorted({c.attack for c in cells}):
+        # plain averaging: monotone degradation along the whole ladder
+        _, steps = _censored_steps(cells, grid, "mean", attack)
+        assert all(b >= a for a, b in zip(steps, steps[1:])), (
+            "mean convergence-step curve must be monotone", attack,
+            steps.tolist())
+        fr, dist = adversarial_curve(cells, "mean", attack)
+        if attack in STRONG_ATTACKS:
+            assert dist[-1] > 10 * max(dist[0], grid.converge_tol), (
+                "mean must degrade badly under", attack, dist.tolist())
+        elif attack == "little_is_enough":
+            # stealthy: the mean's floor rises steadily with the
+            # colluding fraction even though no single step is wild
+            assert dist[-1] > 1.5 * dist[0], (attack, dist.tolist())
+        # robust statistics: bounded floor up to their breakdown budget
+        for agg in ROBUST:
+            cap = sim_aggregator_max_f(agg, grid.n_workers)
+            held = [c for c in cells
+                    if c.aggregator == agg and c.attack == attack
+                    and c.n_byz <= cap]
+            assert held and all(not c.diverged
+                                and c.final_dist <= floor
+                                for c in held), (
+                "robustness floor violated within breakdown budget",
+                agg, attack,
+                [(c.fraction, c.final_dist) for c in held])
+    # breakdown contrast at the top of the ladder, strongest attack
+    _, mean_scale = adversarial_curve(cells, "mean", "scale")
+    for agg in ROBUST:
+        _, rob = adversarial_curve(cells, agg, "scale")
+        assert mean_scale[-1] > 100 * rob[-1], (agg, mean_scale[-1],
+                                                rob[-1])
+    csv_rows.append(("adversarial/sim/floor_held", 1,
+                     f"robust floor <= {floor:.2f} up to breakdown; "
+                     f"mean/scale ends at {mean_scale[-1]:.3g}"))
+    return dict(n_workers=grid.n_workers, steps=grid.steps,
+                converge_tol=grid.converge_tol, elapsed_s=elapsed,
+                curves=curves, breakdown_fractions=breakdown)
+
+
+def bench_arch(csv_rows, quick: bool) -> dict:
+    """Per-architecture vulnerability: every registered ArchSpec swept
+    under ITS default aggregation statistic."""
+    aggs = tuple(dict.fromkeys(
+        get_arch(a).default_aggregator for a in list_archs()))
+    grid = _grid(quick, aggregators=aggs,
+                 attacks=("scale", "little_is_enough"))
+    cells = adversarial_sweep(grid, seed=1)
+    out = {}
+    for arch in list_archs():
+        agg = get_arch(arch).default_aggregator
+        out[arch] = {"aggregator": agg}
+        for attack in grid.resolved_attacks():
+            fr, dist = adversarial_curve(cells, agg, attack)
+            _, steps = _censored_steps(cells, grid, agg, attack)
+            out[arch][attack] = dict(fractions=fr.tolist(),
+                                     final_dist=dist.tolist(),
+                                     converged_step=steps.tolist())
+            csv_rows.append((
+                f"adversarial/arch/{arch}/{attack}/final_dist_at_max",
+                float(dist[-1]), f"aggregator={agg}"))
+    # the paper's per-arch story: in-DB robust archs survive the attack
+    # ladder that blows up every plain-averaging architecture
+    for arch in list_archs():
+        spec = get_arch(arch)
+        _, dist = adversarial_curve(
+            cells, spec.default_aggregator, "scale")
+        if spec.default_aggregator == "mean":
+            assert dist[-1] > 10 * grid.init_dist, (arch, dist[-1])
+        else:
+            assert dist[-1] <= 2 * grid.converge_tol, (arch, dist[-1])
+    return out
+
+
+def bench_jax(csv_rows, quick: bool) -> dict:
+    """Real-training rows: robust aggregation converges through an
+    active byzantine worker under >= 2 attack models; plain averaging
+    under the same attack is the diverging control."""
+    steps = 40 if quick else 120
+    data = 2048 if quick else 4096
+    rows = {}
+    for inner, attack in (("trimmed_mean", "scale"),
+                          ("trimmed_mean", "sign_flip")):
+        r = byzantine_train.run_in_subprocess(
+            inner, attack=attack, steps=steps, data_size=data)
+        rows[f"{inner}/{attack}"] = r
+        csv_rows.append((
+            f"adversarial/jax/{inner}/{attack}/tail_loss",
+            r["tail_loss"],
+            f"head={r['head_loss']:.3f} acc={r['acc']:.3f} "
+            f"steps={steps}"))
+        # PR 1's converges-under-attack result, per attack model
+        assert r["max_loss"] < 4.0, (inner, attack, r)
+        assert r["tail_loss"] < r["head_loss"], (inner, attack, r)
+    plain = byzantine_train.run_in_subprocess(
+        "allreduce", attack="scale", steps=max(steps // 3, 10),
+        data_size=data)
+    rows["allreduce/scale"] = plain
+    csv_rows.append(("adversarial/jax/allreduce/scale/final_loss",
+                     plain["final_loss"], "diverging control"))
+    robust_final = rows["trimmed_mean/scale"]["final_loss"]
+    # a long enough control overflows clean through inf to nan — any
+    # non-finite loss IS the divergence this row exists to show
+    assert not np.isfinite(plain["final_loss"]) \
+        or plain["final_loss"] > 10.0 * robust_final, (plain,
+                                                       robust_final)
+    return rows
+
+
+# categorical line palette + chart styling, shared with the knee chart
+# so the two benchmark figures stay one system
+from benchmarks.pareto_sweep import (_INK, _INK2,  # noqa: E402
+                                     _SERIES_COLORS, _SURFACE)
+
+
+def _chart(sim: dict, path):
+    """One panel per attack model, final distance (log) vs byzantine
+    fraction, a line per aggregator; returns the path or None when
+    matplotlib is unavailable."""
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        return None
+    attacks = sorted({k.split("/", 1)[1] for k in sim["curves"]})
+    aggs = list(dict.fromkeys(k.split("/", 1)[0]
+                              for k in sim["curves"]))
+    ncol = 3
+    nrow = (len(attacks) + ncol - 1) // ncol
+    fig, axes = plt.subplots(nrow, ncol, figsize=(4.1 * ncol,
+                                                  3.2 * nrow),
+                             dpi=144, sharex=True)
+    fig.patch.set_facecolor(_SURFACE)
+    axes = np.atleast_1d(axes).ravel()
+    for ax in axes[len(attacks):]:
+        ax.set_visible(False)
+    for ax, attack in zip(axes, attacks):
+        ax.set_facecolor(_SURFACE)
+        for i, agg in enumerate(aggs):
+            c = sim["curves"][f"{agg}/{attack}"]
+            ax.plot(c["fractions"], np.maximum(c["final_dist"], 1e-3),
+                    color=_SERIES_COLORS[i % len(_SERIES_COLORS)],
+                    linewidth=2, label=agg, zorder=3)
+        ax.set_yscale("log")
+        ax.axhline(2 * sim["converge_tol"], color=_INK2, linewidth=0.8,
+                   linestyle="--", zorder=2)
+        ax.set_title(attack, color=_INK, loc="left", fontsize=10)
+        ax.grid(True, color="#e7e6e3", linewidth=0.8, zorder=0)
+        for s in ("top", "right"):
+            ax.spines[s].set_visible(False)
+        for s in ("left", "bottom"):
+            ax.spines[s].set_color("#d7d6d2")
+        ax.tick_params(colors=_INK2, labelsize=8)
+    axes[0].set_ylabel("final |theta - theta*| (log)", color=_INK2,
+                       fontsize=9)
+    for ax in axes[max(len(attacks) - ncol, 0):len(attacks)]:
+        ax.set_xlabel("byzantine fraction", color=_INK2, fontsize=9)
+    axes[0].legend(frameon=False, fontsize=8, labelcolor=_INK)
+    fig.suptitle("Byzantine-fraction degradation per aggregator "
+                 "(dashed = robustness floor)", color=_INK, x=0.01,
+                 ha="left", fontsize=11)
+    fig.tight_layout(rect=(0, 0, 1, 0.95))
+    fig.savefig(path, facecolor=_SURFACE)
+    plt.close(fig)
+    return path
+
+
+def run(csv_rows, *, quick: bool = False, only=None, skip_jax=False,
+        json_path: str = "BENCH_adversarial.json",
+        chart_path: str = "adversarial_curves.png"):
+    sections = SECTIONS if only is None else (only,)
+    payload = {"benchmark": "adversarial_curves", "quick": quick}
+    if "sim" in sections:
+        payload["sim"] = bench_sim(csv_rows, quick)
+        chart = _chart(payload["sim"], chart_path)
+        if chart:
+            csv_rows.append(("adversarial/sim/_chart", 1, chart))
+            payload["chart"] = chart
+    if "arch" in sections:
+        payload["arch"] = bench_arch(csv_rows, quick)
+    if "jax" in sections and not skip_jax:
+        payload["jax"] = bench_jax(csv_rows, quick)
+    # a --only / --skip-jax iteration must not overwrite the TRACKED
+    # record with a partial payload (same guard as pareto_sweep's); an
+    # explicit non-default --json path is always honoured
+    partial = only is not None or skip_jax
+    if json_path and (not partial or json_path
+                      != "BENCH_adversarial.json"):
+        with open(json_path, "w") as f:
+            json.dump(_jsonable(payload), f, indent=2, allow_nan=False)
+        csv_rows.append(("adversarial/_json", 1, json_path))
+    return csv_rows
+
+
+def _jsonable(obj):
+    """Strict-JSON-safe copy: the diverging control's loss overflows to
+    inf/NaN, which bare ``json.dump`` would emit as RFC-8259-invalid
+    tokens — non-finite floats become null in the tracked record."""
+    if isinstance(obj, dict):
+        return {k: _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, float) and not np.isfinite(obj):
+        return None
+    return obj
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller fleet / fewer steps / short jax rows")
+    ap.add_argument("--only", default=None, choices=SECTIONS)
+    ap.add_argument("--skip-jax", action="store_true",
+                    help="skip the real-training rows (fast local "
+                         "iteration on the simulated surface)")
+    ap.add_argument("--json", default="BENCH_adversarial.json")
+    ap.add_argument("--chart", default="adversarial_curves.png")
+    args = ap.parse_args()
+    rows = []
+    run(rows, quick=args.quick, only=args.only, skip_jax=args.skip_jax,
+        json_path=args.json, chart_path=args.chart)
+    print("name,value,derived")
+    for name, value, notes in rows:
+        print(f"{name},{value},{str(notes).replace(',', ';')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,8 @@
 
 Prints ``name,value,derived`` CSV rows.  Usage:
     PYTHONPATH=src python -m benchmarks.run [--only table2|fig23|table3|
-        roofline|strategy_matrix|fault_tolerance|sweep|knee|trace]
+        roofline|strategy_matrix|fault_tolerance|sweep|knee|trace|
+        adversarial]
 """
 from __future__ import annotations
 
@@ -16,8 +17,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (fault_tolerance, fig23_comm, pareto_sweep,
-                            roofline_report, strategy_matrix, table2_cost,
+    from benchmarks import (adversarial_curves, fault_tolerance,
+                            fig23_comm, pareto_sweep, roofline_report,
+                            strategy_matrix, table2_cost,
                             table3_convergence, trace_replay)
     suites = {
         "table2": table2_cost.run,
@@ -29,6 +31,7 @@ def main() -> None:
         "sweep": pareto_sweep.run,
         "knee": pareto_sweep.run_knee,
         "trace": trace_replay.run,
+        "adversarial": adversarial_curves.run,
     }
     if args.only:
         suites = {args.only: suites[args.only]}

@@ -231,11 +231,18 @@ def get_strategy(name: str, **kw) -> Strategy:
     if name == "quantized_scatterreduce":    # beyond-paper (lazy import)
         from repro.core.compression import QuantizedScatterReduce
         return QuantizedScatterReduce(**kw)
-    if name in ("trimmed_mean", "coordinate_median"):
-        # byzantine-robust aggregation (SPIRT §5) — lazy import to keep
-        # core free of a hard serverless dependency
-        from repro.serverless.recovery import CoordinateMedian, TrimmedMean
-        cls = TrimmedMean if name == "trimmed_mean" else CoordinateMedian
+    if name in ("trimmed_mean", "coordinate_median", "krum",
+                "geometric_median"):
+        # byzantine-robust aggregation (SPIRT §5 / Blanchard et al. /
+        # Weiszfeld) — lazy import to keep core free of a hard
+        # serverless dependency
+        from repro.serverless.recovery import (CoordinateMedian,
+                                               GeometricMedian, Krum,
+                                               TrimmedMean)
+        cls = {"trimmed_mean": TrimmedMean,
+               "coordinate_median": CoordinateMedian,
+               "krum": Krum,
+               "geometric_median": GeometricMedian}[name]
         return cls(**kw)
     if name == "byzantine":
         # fault-injection wrapper: get_strategy("byzantine",

@@ -1,24 +1,32 @@
 """Real-training byzantine-robustness driver (subprocess entry point).
 
 Trains the MobileNet CNN on the synthetic CIFAR set, 4-way
-data-parallel, with worker 0 wrapped in ``ByzantineGradients`` (scaled
-poisoned gradients) for the whole run, under a chosen inner aggregation
-strategy.  This is the single harness behind both
-``benchmarks/fault_tolerance.py`` (long run: does SPIRT + trimmed mean
-converge under attack?) and ``tests/test_robust_agg.py`` (short run:
-does plain averaging diverge while trimmed mean trains?).
+data-parallel, with a chosen byzantine worker set wrapped in
+``ByzantineGradients`` under any registered attack model
+(``repro.serverless.adversarial``: sign_flip / scale / gaussian_noise /
+little_is_enough / zero) and any inner aggregation strategy —
+including the robust family (``trimmed_mean``, ``coordinate_median``,
+``krum``, ``geometric_median``).  This is the single harness behind
+``benchmarks/fault_tolerance.py``, ``benchmarks/adversarial_curves.py``
+(the real-JAX rows of the byzantine-fraction curves) and
+``tests/test_robust_agg.py`` / ``tests/test_adversarial.py``.
 
 It must run in its own process so ``--xla_force_host_platform_
 device_count`` is set before jax initializes; use
 :func:`run_in_subprocess` from the parent, or directly:
 
   XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \\
-    python -m repro.launch.byzantine_train --inner trimmed_mean --steps 150
+    python -m repro.launch.byzantine_train --inner trimmed_mean \\
+    --attack sign_flip --steps 150
 
 Prints one machine-readable line:
 
-  RESULT,inner=<name>,steps=<n>,acc=<f>,final_loss=<f>,max_loss=<f>,\\
-head_loss=<f>,tail_loss=<f>
+  RESULT,inner=<name>,attack=<name>,steps=<n>,acc=<f>,final_loss=<f>,\\
+max_loss=<f>,head_loss=<f>,tail_loss=<f>
+
+The in-process :func:`run` additionally returns the full per-step loss
+trace (``"losses"``), which is bit-identical across same-seed runs —
+pinned by a regression test.
 """
 from __future__ import annotations
 
@@ -26,13 +34,29 @@ import argparse
 import os
 import subprocess
 import sys
-from typing import Dict
+from typing import Any, Dict, Optional, Tuple
+
+#: robust aggregators constructible by name with their tuning kwarg
+ROBUST_INNER = ("trimmed_mean", "coordinate_median", "krum",
+                "geometric_median")
 
 
-def run(inner: str = "trimmed_mean", *, steps: int = 150, batch: int = 64,
-        data_size: int = 4096, trim: int = 1, microbatches: int = 4,
-        byz_scale: float = -8.0, lr: float = 0.1,
-        eval_size: int = 512) -> Dict[str, float]:
+def run(inner: str = "trimmed_mean", *, attack: str = "scale",
+        steps: int = 150, batch: int = 64, data_size: int = 4096,
+        trim: int = 1, krum_f: int = 0, microbatches: int = 4,
+        byz_scale: Optional[float] = None,
+        byz_workers: Tuple[int, ...] = (0,), lr: float = 0.1,
+        eval_size: int = 512, seed: int = 0) -> Dict[str, Any]:
+    """One training run under an active byzantine worker set.
+
+    ``byz_scale=None`` keeps PR 1's calibrated -8x magnitude for the
+    ``scale`` attack and falls through to the attack model's own
+    default for everything else.  ``krum_f=0`` because the 4-way
+    harness only satisfies Krum's ``W >= 2f + 3`` at ``f = 0`` (the
+    neighbourhood scoring still excludes the attacker).  The returned
+    dict includes the full loss trace — a pure function of the
+    arguments, so equal seeds replay bit-identically.
+    """
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -56,17 +80,24 @@ def run(inner: str = "trimmed_mean", *, steps: int = 150, batch: int = 64,
         logits, _ = model.apply(params, b)
         return losses.classification_loss(logits, b["labels"])
 
-    if inner in ("trimmed_mean", "coordinate_median"):
-        kw = {"trim": trim} if inner == "trimmed_mean" else {}
-        inner_strat = get_strategy(inner, microbatches=microbatches, **kw)
+    if inner in ROBUST_INNER:
+        kw = {"microbatches": microbatches}
+        if inner == "trimmed_mean":
+            kw["trim"] = trim
+        elif inner == "krum":
+            kw["f"] = krum_f
+        inner_strat = get_strategy(inner, **kw)
     else:
         inner_strat = get_strategy(inner)
-    strat = get_strategy("byzantine", inner=inner_strat, workers=(0,),
-                         scale=byz_scale)
+    if byz_scale is None and attack == "scale":
+        byz_scale = -8.0               # PR 1's calibrated attack
+    strat = get_strategy("byzantine", inner=inner_strat,
+                         workers=tuple(byz_workers), attack=attack,
+                         scale=byz_scale, seed=seed, n_workers=n_dev)
     ts = build_train_step(model, optim.sgd(lr, momentum=0.9), strat, mesh,
                           loss_fn=loss_fn)
-    state = ts.init_state(jax.random.PRNGKey(0))
-    rs = np.random.RandomState(0)
+    state = ts.init_state(jax.random.PRNGKey(seed))
+    rs = np.random.RandomState(seed)
     seen = []
     for _ in range(steps):
         idx = rs.randint(0, len(imgs), batch)
@@ -80,12 +111,14 @@ def run(inner: str = "trimmed_mean", *, steps: int = 150, batch: int = 64,
     k = min(10, len(seen))
     return {"acc": acc, "final_loss": seen[-1], "max_loss": max(seen),
             "head_loss": float(np.mean(seen[:k])),
-            "tail_loss": float(np.mean(seen[-k:]))}
+            "tail_loss": float(np.mean(seen[-k:])),
+            "losses": tuple(seen)}
 
 
-def run_in_subprocess(inner: str, *, steps: int, data_size: int = 4096,
-                      devices: int = 4,
-                      timeout: float = 1800.0) -> Dict[str, float]:
+def run_in_subprocess(inner: str, *, steps: int, attack: str = "scale",
+                      data_size: int = 4096, devices: int = 4,
+                      seed: int = 0,
+                      timeout: float = 1800.0) -> Dict[str, Any]:
     """Spawn this module with its own XLA device count; parse RESULT."""
     import repro
     # repro is a namespace package (__file__ is None): resolve src/ from
@@ -96,29 +129,32 @@ def run_in_subprocess(inner: str, *, steps: int, data_size: int = 4096,
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
     out = subprocess.run(
         [sys.executable, "-m", "repro.launch.byzantine_train",
-         "--inner", inner, "--steps", str(steps),
-         "--data-size", str(data_size)],
+         "--inner", inner, "--attack", attack, "--steps", str(steps),
+         "--data-size", str(data_size), "--seed", str(seed)],
         capture_output=True, text=True, timeout=timeout, env=env)
     if out.returncode != 0:
         raise RuntimeError(out.stderr[-3000:])
     line = [l for l in out.stdout.splitlines()
             if l.startswith("RESULT,")][-1]
     fields = dict(kv.split("=", 1) for kv in line.split(",")[1:])
-    return {k: (v if k == "inner" else float(v))
+    return {k: (v if k in ("inner", "attack") else float(v))
             for k, v in fields.items()}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--inner", default="trimmed_mean")
+    ap.add_argument("--attack", default="scale")
     ap.add_argument("--steps", type=int, default=150)
     ap.add_argument("--data-size", type=int, default=4096)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    r = run(args.inner, steps=args.steps, data_size=args.data_size)
-    print(f"RESULT,inner={args.inner},steps={args.steps},"
-          f"acc={r['acc']},final_loss={r['final_loss']},"
-          f"max_loss={r['max_loss']},head_loss={r['head_loss']},"
-          f"tail_loss={r['tail_loss']}")
+    r = run(args.inner, attack=args.attack, steps=args.steps,
+            data_size=args.data_size, seed=args.seed)
+    print(f"RESULT,inner={args.inner},attack={args.attack},"
+          f"steps={args.steps},acc={r['acc']},"
+          f"final_loss={r['final_loss']},max_loss={r['max_loss']},"
+          f"head_loss={r['head_loss']},tail_loss={r['tail_loss']}")
 
 
 if __name__ == "__main__":

@@ -2,6 +2,11 @@ from repro.serverless.archs import (  # noqa: F401
     ArchSpec, get_arch, list_archs, paper_archs, register_arch,
     unregister_arch,
 )
+from repro.serverless.adversarial import (  # noqa: F401
+    AttackSpec, SIM_AGGREGATORS, byzantine_fractions, get_attack,
+    list_attacks, register_attack, sim_aggregator_max_f,
+    unregister_attack,
+)
 from repro.serverless.simulator import (  # noqa: F401
     ARCHS, Channel, EpochReport, PAPER_TABLE2, REDIS, RoundPlan, S3,
     ServerlessSetup, paper_cost_check, round_plan, simulate_epoch,
@@ -15,8 +20,9 @@ from repro.serverless.faults import (  # noqa: F401
     Straggler, WorkerCrash,
 )
 from repro.serverless.recovery import (  # noqa: F401
-    CheckpointRestore, CoordinateMedian, PeerTakeover, RecoveryEvent,
-    RecoveryPolicy, TrimmedMean, coordinate_median, trimmed_mean,
+    CheckpointRestore, CoordinateMedian, GeometricMedian, Krum,
+    PeerTakeover, RecoveryEvent, RecoveryPolicy, TrimmedMean,
+    coordinate_median, geometric_median, krum, trimmed_mean,
     trimmed_mean_sort,
 )
 from repro.serverless.autoscale import (  # noqa: F401
@@ -26,7 +32,8 @@ from repro.serverless.traces import (  # noqa: F401
     LAMBDA_2105_07806, Trace, lambda_default,
 )
 from repro.serverless.sweep import (  # noqa: F401
-    AnalyticSweep, EventPointStats, EventSweepPoint, FaultRates, SweepGrid,
-    iter_grid, knee_point, pareto_front, ram_scaled_compute, scalar_sweep,
-    sweep_analytic, sweep_events,
+    AdversarialCell, AdversarialGrid, AnalyticSweep, EventPointStats,
+    EventSweepPoint, FaultRates, SweepGrid, adversarial_curve,
+    adversarial_sweep, iter_grid, knee_point, pareto_front,
+    ram_scaled_compute, scalar_sweep, sweep_analytic, sweep_events,
 )

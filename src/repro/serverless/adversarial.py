@@ -1,0 +1,371 @@
+"""Adversarial robustness lab: the attack-model registry + the batched
+robust-aggregation statistics behind the byzantine-fraction sweeps.
+
+The paper's fault-tolerance claim is qualitative — SPIRT-style
+in-database robust aggregation survives adversarial workers while plain
+averaging degrades — and PR 1 demonstrated it at exactly one point: one
+worker, one attack (a -8x gradient scale).  The ROADMAP's open
+*adversarial-fraction curves* item needs the whole surface: byzantine
+fraction 0 -> (W-1)/2W x attack model x aggregator.  This module holds
+the two registries that surface is swept over:
+
+  **Attack models** — one frozen :class:`AttackSpec` per way a
+  colluding or independent byzantine worker corrupts its gradient,
+  following the ``archs.ArchSpec`` pattern (``register_attack`` /
+  ``get_attack`` / ``list_attacks``; unknown names raise with the
+  registered list).  Each spec carries BOTH realizations of the attack:
+
+    ``apply_rows``  batched numpy — corrupts a ``[..., W, D]`` stack of
+                    per-worker gradients under a boolean byzantine mask
+                    ``[..., W]``; drives the vectorized quadratic-loss
+                    simulated path (``sweep.adversarial_sweep``) and
+                    the breakdown-point property tests.
+    ``jax_apply``   the same corruption inside a ``shard_map`` body,
+                    dispatched by ``faults.ByzantineGradients`` before
+                    the inner strategy's collective — real training
+                    sees exactly what the simulated stack saw.
+
+  Registered attacks (SPIRT §5 / Baruch et al. "A Little Is Enough"):
+
+    sign_flip          g -> -g
+    scale              g -> scale * g           (default -10, PR 1's attack)
+    gaussian_noise     g -> g + scale * N(0, I) (seeded, per worker)
+    little_is_enough   all byzantine workers collude on
+                       honest_mean - scale * honest_std — small enough
+                       per coordinate to hide inside the honest spread
+                       (for small ``scale``), yet identical across
+                       attackers so selection rules that trust tight
+                       clusters (Krum) are the explicit target
+    zero               g -> 0                   (dropped contribution)
+
+  **Simulated aggregators** — batched numpy twins of the
+  :mod:`repro.serverless.recovery` JAX statistics, operating on
+  ``[..., W, D]`` stacks with a (possibly per-batch-row) byzantine
+  budget ``f``: ``mean``, ``trimmed_mean``, ``coordinate_median``,
+  ``krum`` (multi-Krum), ``geometric_median`` (Weiszfeld).  Exactness
+  against the JAX implementations is pinned by
+  ``tests/test_adversarial.py``; the vectorized sweep uses these so a
+  2,000-cell fraction grid costs milliseconds, not jit compiles.
+
+Import-light by design (numpy only at module scope; ``jax_apply``
+closures lazy-import jax) so analytic sweeps and property tests never
+pay accelerator start-up.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Attack-model registry
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AttackSpec:
+    """One byzantine gradient-corruption model.
+
+    ``apply_rows(stacked, byz_mask, rng, scale)`` — batched numpy:
+    ``stacked`` is ``[..., W, D]``, ``byz_mask`` a boolean ``[..., W]``
+    broadcastable against it, ``rng`` a seeded generator (only the
+    stochastic attacks draw from it), ``scale`` the attack magnitude.
+    Returns a corrupted copy; honest rows are bit-unchanged.
+
+    ``jax_apply(grads, bad, axis_names, scale, seed, step)`` — the
+    same corruption for one worker inside a ``shard_map`` body:
+    ``grads`` is the gradient pytree, ``bad`` a traced boolean scalar
+    (is THIS worker byzantine), collectives over ``axis_names`` are
+    available (the colluding attack reads fleet statistics through
+    them), and ``step`` is the traced sync-step counter
+    ``ByzantineGradients`` threads through its strategy state — the
+    stochastic attacks fold it into their PRNG key so every step draws
+    FRESH noise, exactly like the numpy twin redraws per step.
+    """
+    name: str
+    apply_rows: Callable
+    jax_apply: Callable
+    description: str = ""
+    colluding: bool = False            # needs fleet statistics (LIE)
+    default_scale: float = 1.0
+
+    def rows(self, stacked, byz_mask, rng, scale=None):
+        """``apply_rows`` with the spec's own default magnitude."""
+        return self.apply_rows(
+            np.asarray(stacked, float), np.asarray(byz_mask, bool), rng,
+            self.default_scale if scale is None else float(scale))
+
+
+_ATTACKS: Dict[str, AttackSpec] = {}
+
+
+def register_attack(spec: AttackSpec, *,
+                    overwrite: bool = False) -> AttackSpec:
+    """Add an attack model (returns it).  Re-registering a name is an
+    error unless ``overwrite`` — same contract as ``register_arch``."""
+    if not overwrite and spec.name in _ATTACKS:
+        raise ValueError(f"attack model {spec.name!r} is already "
+                         "registered (pass overwrite=True to replace)")
+    _ATTACKS[spec.name] = spec
+    return spec
+
+
+def unregister_attack(name: str) -> None:
+    _ATTACKS.pop(name, None)
+
+
+def get_attack(name: str) -> AttackSpec:
+    try:
+        return _ATTACKS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown attack model {name!r}; registered: "
+            f"{', '.join(_ATTACKS)}") from None
+
+
+def list_attacks() -> Tuple[str, ...]:
+    """All registered attack names, in registration order."""
+    return tuple(_ATTACKS)
+
+
+# ---- numpy realizations (batched) -----------------------------------------
+def _rows_sign_flip(stacked, byz, rng, scale):
+    return np.where(byz[..., None], -stacked, stacked)
+
+
+def _rows_scale(stacked, byz, rng, scale):
+    return np.where(byz[..., None], scale * stacked, stacked)
+
+
+def _rows_gaussian(stacked, byz, rng, scale):
+    # ONE noise field over the trailing (W, D) axes, broadcast across
+    # any batch dims: cells that share a draw (e.g. the fraction axis of
+    # a sweep) stay comparable — growing the byzantine set adds noise
+    # terms instead of redrawing the whole field
+    noise = rng.standard_normal(stacked.shape[-2:])
+    return np.where(byz[..., None], stacked + scale * noise, stacked)
+
+
+def _rows_lie(stacked, byz, rng, scale):
+    # colluding: every byzantine worker ships the SAME vector, placed
+    # `scale` standard deviations below the per-coordinate mean of the
+    # WHOLE pre-corruption stack — every row is still honestly computed
+    # at this point, so fleet statistics ARE the honest distribution
+    # the attackers are assumed to know.  Matches _jax_lie's pmean
+    # collectives exactly (same stack, same statistic).
+    mu = stacked.mean(axis=-2, keepdims=True)
+    sd = stacked.std(axis=-2, keepdims=True)
+    return np.where(byz[..., None], mu - scale * sd, stacked)
+
+
+def _rows_zero(stacked, byz, rng, scale):
+    return np.where(byz[..., None], 0.0, stacked)
+
+
+# ---- jax realizations (inside shard_map; lazy imports) --------------------
+def _jax_sign_flip(grads, bad, axis_names, scale, seed, step):
+    import jax
+    import jax.numpy as jnp
+    return jax.tree.map(lambda g: jnp.where(bad, -g, g), grads)
+
+
+def _jax_scale(grads, bad, axis_names, scale, seed, step):
+    import jax
+    import jax.numpy as jnp
+    return jax.tree.map(
+        lambda g: jnp.where(bad, g * jnp.asarray(scale, g.dtype), g),
+        grads)
+
+
+def _jax_gaussian(grads, bad, axis_names, scale, seed, step):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serverless.faults import _linear_axis_index
+    # per-(worker, step) noise stream: fold the (traced) data-parallel
+    # index into the seed so no two attackers collude by accident, and
+    # the sync-step counter so every step draws FRESH noise (a frozen
+    # draw would be a constant-bias attack, not gaussian noise); one
+    # more fold per leaf so leaves draw independently
+    key = jax.random.fold_in(jax.random.PRNGKey(seed),
+                             _linear_axis_index(axis_names))
+    key = jax.random.fold_in(key, step)
+    leaves, treedef = jax.tree.flatten(grads)
+    out = []
+    for i, g in enumerate(leaves):
+        noise = jax.random.normal(jax.random.fold_in(key, i), g.shape,
+                                  jnp.float32).astype(g.dtype)
+        out.append(jnp.where(bad, g + jnp.asarray(scale, g.dtype) * noise,
+                             g))
+    return jax.tree.unflatten(treedef, out)
+
+
+def _jax_lie(grads, bad, axis_names, scale, seed, step):
+    import jax
+    import jax.numpy as jnp
+
+    def one(g):
+        g32 = g.astype(jnp.float32)
+        # fleet statistics through the same collective fabric the inner
+        # strategy will use; computed from PRE-corruption gradients —
+        # the attackers know the honest distribution (their own locally
+        # computed gradients are honest until this corruption step)
+        mu = jax.lax.pmean(g32, axis_name=axis_names)
+        var = jax.lax.pmean(g32 * g32, axis_name=axis_names) - mu * mu
+        evil = (mu - scale * jnp.sqrt(jnp.maximum(var, 0.0))).astype(
+            g.dtype)
+        return jnp.where(bad, evil, g)
+    return jax.tree.map(one, grads)
+
+
+def _jax_zero(grads, bad, axis_names, scale, seed, step):
+    import jax
+    import jax.numpy as jnp
+    return jax.tree.map(
+        lambda g: jnp.where(bad, jnp.zeros_like(g), g), grads)
+
+
+register_attack(AttackSpec(
+    name="sign_flip", apply_rows=_rows_sign_flip,
+    jax_apply=_jax_sign_flip,
+    description="g -> -g (gradient ascent on the honest objective)"))
+
+register_attack(AttackSpec(
+    name="scale", apply_rows=_rows_scale, jax_apply=_jax_scale,
+    default_scale=-10.0,
+    description="g -> scale * g (PR 1's -kx poisoned gradient)"))
+
+register_attack(AttackSpec(
+    name="gaussian_noise", apply_rows=_rows_gaussian,
+    jax_apply=_jax_gaussian, default_scale=10.0,
+    description="g -> g + scale * N(0, I), seeded per worker"))
+
+register_attack(AttackSpec(
+    name="little_is_enough", apply_rows=_rows_lie, jax_apply=_jax_lie,
+    colluding=True, default_scale=1.5,
+    description="colluding: honest_mean - scale * honest_std "
+                "(Baruch et al.; hides inside the honest spread)"))
+
+register_attack(AttackSpec(
+    name="zero", apply_rows=_rows_zero, jax_apply=_jax_zero,
+    description="g -> 0 (silently dropped contribution)"))
+
+
+# ---------------------------------------------------------------------------
+# Batched numpy robust aggregators (simulated-path twins of recovery.py)
+# ---------------------------------------------------------------------------
+def np_mean(stacked, f=0):
+    """Plain averaging — breakdown point 0; the degradation baseline."""
+    return np.asarray(stacked, float).mean(axis=-2)
+
+
+def np_trimmed_mean(stacked, f=1):
+    """Per-coordinate mean after dropping the ``f`` smallest and ``f``
+    largest values.  ``f`` may be an int or an int array broadcasting
+    over the batch dims (one budget per sweep row); needs ``W > 2f``."""
+    stacked = np.asarray(stacked, float)
+    W = stacked.shape[-2]
+    f = np.asarray(f, int)
+    if np.any(2 * f >= W):
+        raise ValueError(f"trimmed_mean needs W > 2*f, got W={W}, "
+                         f"f={f.max()}")
+    s = np.sort(stacked, axis=-2)
+    pos = np.arange(W)
+    keep = (pos >= f[..., None]) & (pos < W - f[..., None])
+    return np.sum(s * keep[..., None], axis=-2) \
+        / (W - 2 * f)[..., None]
+
+
+def np_coordinate_median(stacked, f=0):
+    """Per-coordinate median — breakdown point (W-1)/2W."""
+    return np.median(np.asarray(stacked, float), axis=-2)
+
+
+def np_krum(stacked, f=1, m=1):
+    """(Multi-)Krum (Blanchard et al.): score every row by the summed
+    squared distance to its ``W - f - 2`` nearest neighbours, average
+    the ``m`` lowest-scoring rows.  Needs ``W >= 2f + 3``; ``f`` may be
+    batched like :func:`np_trimmed_mean`'s."""
+    stacked = np.asarray(stacked, float)
+    W = stacked.shape[-2]
+    f = np.asarray(f, int)
+    if np.any(f < 0):
+        raise ValueError(f"krum needs f >= 0, got {f.min()}")
+    if np.any(W < 2 * f + 3):
+        raise ValueError(
+            f"krum needs W >= 2f + 3 to out-vote f byzantine rows, got "
+            f"W={W}, f={f.max()} (max feasible f is {(W - 3) // 2})")
+    if not 1 <= int(m) <= W:
+        raise ValueError(f"krum needs 1 <= m <= W, got m={m}")
+    d = ((stacked[..., :, None, :] - stacked[..., None, :, :]) ** 2) \
+        .sum(axis=-1)                          # [..., W, W]
+    ds = np.sort(d, axis=-1)                   # col 0 is self (0.0)
+    pos = np.arange(W)
+    # neighbours 1 .. W-f-2 inclusive == W-f-2 nearest non-self rows;
+    # [..., 1, W] so one row-axis mask broadcasts over every scored row
+    nb = (pos >= 1) & (pos <= (W - 2 - f)[..., None, None])
+    scores = (ds * nb).sum(axis=-1)            # [..., W]
+    sel = np.argsort(scores, axis=-1, kind="stable")[..., :int(m)]
+    return np.take_along_axis(stacked, sel[..., None],
+                              axis=-2).mean(axis=-2)
+
+
+def np_geometric_median(stacked, f=0, *, tol=1e-8, max_iter=200):
+    """Geometric median over the worker axis by Weiszfeld iteration,
+    batched; breakdown point (W-1)/2W.  Initialized at the coordinate
+    median; stops when the relative step falls below ``tol``."""
+    stacked = np.asarray(stacked, float)
+    if tol <= 0 or max_iter < 1:
+        raise ValueError(f"geometric_median needs tol > 0 and "
+                         f"max_iter >= 1, got tol={tol}, "
+                         f"max_iter={max_iter}")
+    z = np.median(stacked, axis=-2)            # [..., D]
+    scale = np.maximum(np.linalg.norm(stacked, axis=-1).max(axis=-1),
+                       1e-12)                  # [...]
+    # rows freeze individually once their own step converges, so a
+    # batched call returns bit-identical results per row regardless of
+    # what else shares the batch (sweep cells stay independent)
+    frozen = np.zeros(z.shape[:-1], bool)
+    for _ in range(max_iter):
+        dist = np.linalg.norm(stacked - z[..., None, :], axis=-1)
+        w = 1.0 / np.maximum(dist, 1e-12 * scale[..., None])
+        z_new = np.sum(w[..., None] * stacked, axis=-2) \
+            / np.sum(w, axis=-1)[..., None]
+        step = np.linalg.norm(z_new - z, axis=-1)
+        z = np.where(frozen[..., None], z, z_new)
+        frozen |= step <= tol * scale
+        if frozen.all():
+            break
+    return z
+
+
+SIM_AGGREGATORS: Dict[str, Callable] = {
+    "mean": np_mean,
+    "trimmed_mean": np_trimmed_mean,
+    "coordinate_median": np_coordinate_median,
+    "krum": np_krum,
+    "geometric_median": np_geometric_median,
+}
+
+
+def sim_aggregator_max_f(name: str, n_workers: int) -> int:
+    """The largest byzantine budget ``f`` the aggregator can be
+    configured with at fleet size ``n_workers`` — its theoretical
+    breakdown point on the fraction axis.  Plain averaging breaks at
+    the first adversary."""
+    if name not in SIM_AGGREGATORS:
+        raise ValueError(f"unknown simulated aggregator {name!r}; "
+                         f"registered: {', '.join(SIM_AGGREGATORS)}")
+    if name == "mean":
+        return 0
+    if name == "krum":
+        return max((n_workers - 3) // 2, 0)
+    return (n_workers - 1) // 2                # median family / trimmed
+
+
+def byzantine_fractions(n_workers: int) -> Tuple[float, ...]:
+    """The fraction ladder 0 -> (W-1)/2W in integer-worker steps: every
+    k/W with 0 <= k <= (W-1)//2 — the whole sub-majority range."""
+    if n_workers < 3:
+        raise ValueError(f"need n_workers >= 3, got {n_workers}")
+    return tuple(k / n_workers for k in range((n_workers - 1) // 2 + 1))

@@ -152,6 +152,14 @@ class ArchSpec:
     ram_scales_compute: bool = True        # Lambda vCPU scales with RAM
     anchor: Optional[str] = None           # PAPER_TABLE2 calibration row
     compute_share: float = 0.85            # compute share of paper time
+    # how the architecture combines the fleet's gradients when workers
+    # may be adversarial — the paper's per-arch vulnerability story:
+    # SPIRT's in-database aggregation is byzantine-robust (trimmed
+    # mean), everything else plain-averages.  Must name a simulated
+    # aggregator in repro.serverless.adversarial.SIM_AGGREGATORS;
+    # benchmarks/adversarial_curves.py draws each architecture's
+    # byzantine-fraction degradation curve under this statistic.
+    default_aggregator: str = "mean"
 
     def __post_init__(self):
         if self.default_recovery not in ("restore", "takeover"):
@@ -159,6 +167,12 @@ class ArchSpec:
                 f"arch {self.name!r}: default_recovery must be "
                 f"'restore' or 'takeover', got "
                 f"{self.default_recovery!r}")
+        from repro.serverless.adversarial import SIM_AGGREGATORS
+        if self.default_aggregator not in SIM_AGGREGATORS:
+            raise ValueError(
+                f"arch {self.name!r}: default_aggregator must be one "
+                f"of {', '.join(SIM_AGGREGATORS)}, got "
+                f"{self.default_aggregator!r}")
 
     def pins_channel(self, channel: Channel) -> bool:
         """True when the configured ``channel`` is overridden by this
@@ -358,7 +372,7 @@ register_arch(ArchSpec(
     name="spirt", round_terms=_spirt_terms, paper=True,
     description="P2P; per-worker in-DB gradient averaging + in-DB "
                 "update, one cross-worker sync per accumulation round",
-    default_recovery="takeover",
+    default_recovery="takeover", default_aggregator="trimmed_mean",
     jax_strategy="spirt", jax_strategy_kwargs=(("microbatches", 4),)))
 
 register_arch(ArchSpec(
@@ -423,6 +437,7 @@ register_arch(ArchSpec(
     description="two-level SPIRT: group-local in-DB averaging, "
                 "cross-group chunk exchange among leaders",
     default_recovery="takeover",           # state lives in the DB
+    default_aggregator="trimmed_mean",     # in-DB robust statistic
     jax_strategy="spirt", jax_strategy_kwargs=(("microbatches", 4),),
     anchor="spirt"))
 
@@ -432,5 +447,6 @@ register_arch(ArchSpec(
                 "Redis premium from the algorithm)",
     sync_channel=S3,
     default_recovery="takeover",           # state lives in S3 instead
+    default_aggregator="trimmed_mean",     # in-DB robust statistic
     jax_strategy="spirt", jax_strategy_kwargs=(("microbatches", 4),),
     anchor="spirt"))

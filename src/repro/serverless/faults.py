@@ -16,11 +16,14 @@ is about:
   ColdStartStorm  a fraction of the fleet pays ``extra_s`` additional
                   cold start (concurrent-invocation burst, arXiv
                   2105.07806's dominant serverless overhead).
-  ByzantineWorker a worker ships poisoned (scaled) gradients.  Timing
-                  is unaffected; correctness bookkeeping flows through
+  ByzantineWorker a worker ships poisoned gradients.  Timing is
+                  unaffected; correctness bookkeeping flows through
                   the runtime's robust-aggregation accounting, and the
                   *real-training* analogue is :class:`ByzantineGradients`
-                  below.
+                  below — which now corrupts via any attack model in
+                  the ``repro.serverless.adversarial`` registry
+                  (sign_flip / scale / gaussian_noise /
+                  little_is_enough / zero) instead of only scaling.
 
 ``FaultPlan`` bundles specs; ``FaultPlan.random`` draws a reproducible
 plan from per-class rates, and ``FaultPlan.from_trace`` resamples one
@@ -264,14 +267,26 @@ class ByzantineGradients(_strategies.Strategy):
     The corruption runs *inside* the shard_map body before the inner
     strategy's collective, so a robust aggregator downstream sees
     exactly what a poisoned serverless worker would have pushed to the
-    channel.  ``mode``: ``scale`` (g *= scale), ``sign_flip`` (-g) or
-    ``zero`` (dropped contribution).
+    channel.  ``attack`` names a registered
+    :class:`repro.serverless.adversarial.AttackSpec` (``sign_flip``,
+    ``scale``, ``gaussian_noise``, ``little_is_enough``, ``zero``, plus
+    anything third parties register); ``scale`` is the attack magnitude
+    (``None`` = the attack's own default) and ``seed`` feeds the
+    stochastic attacks' per-worker noise streams.
+
+    Every kwarg is validated HERE, at construction: a bad worker set,
+    an unknown attack name, a non-finite magnitude or a byzantine
+    *majority* (``len(workers) > (n_workers-1)/2`` when the fleet size
+    is declared) used to surface only deep inside the first jitted sync
+    step, as an XLA trace error with the configuration long gone.
     """
     name: str = "byzantine"
     inner: Optional[_strategies.Strategy] = None
     workers: Tuple[int, ...] = (0,)
-    mode: str = "scale"
-    scale: float = -10.0
+    attack: str = "scale"
+    scale: Optional[float] = None      # None => the attack's default
+    seed: int = 0                      # stochastic attacks' noise stream
+    n_workers: Optional[int] = None    # declared fleet size (validation)
 
     def __post_init__(self):
         if self.inner is None:
@@ -285,31 +300,66 @@ class ByzantineGradients(_strategies.Strategy):
                 f"inner.microbatches={self.inner.microbatches}; set it on "
                 "the inner strategy instead")
         object.__setattr__(self, "microbatches", self.inner.microbatches)
+        workers = tuple(self.workers)
+        if not workers:
+            raise ValueError(
+                "ByzantineGradients needs a non-empty workers tuple "
+                "(an attack with no attackers is a plain wrapper bug)")
+        if len(set(workers)) != len(workers) \
+                or any(not isinstance(w, (int, np.integer)) or w < 0
+                       for w in workers):
+            raise ValueError(
+                f"workers must be distinct non-negative ints, got "
+                f"{workers!r}")
+        object.__setattr__(self, "workers", workers)
+        if self.n_workers is not None:
+            if self.n_workers < 1:
+                raise ValueError(
+                    f"n_workers must be >= 1, got {self.n_workers}")
+            if any(w >= self.n_workers for w in workers):
+                raise ValueError(
+                    f"workers {workers!r} out of range for a fleet of "
+                    f"{self.n_workers}")
+            # byzantine fraction must stay in [0, (W-1)/2W]: a corrupted
+            # majority out-votes EVERY robust statistic, so the run
+            # would measure nothing but the attack
+            max_byz = (self.n_workers - 1) // 2
+            if len(workers) > max_byz:
+                raise ValueError(
+                    f"{len(workers)} byzantine workers of {self.n_workers}"
+                    f" is a corrupted majority; at most {max_byz} "
+                    f"(fraction <= (W-1)/2W) are aggregatable")
+        # resolves through the registry: unknown names raise with the
+        # registered list (mirrors get_arch's actionable error)
+        from repro.serverless.adversarial import get_attack
+        spec = get_attack(self.attack)
+        scale = spec.default_scale if self.scale is None else self.scale
+        if not math.isfinite(scale):
+            raise ValueError(f"attack scale must be finite, got {scale}")
+        object.__setattr__(self, "scale", float(scale))
 
     def init_state(self, grads_like):
-        return self.inner.init_state(grads_like)
+        # (sync-step counter, inner state): the counter feeds the
+        # stochastic attacks' PRNG keys so every step corrupts with
+        # fresh draws — matching the numpy twins' redraw-per-step
+        import jax.numpy as jnp
+        return (jnp.zeros((), jnp.int32),
+                self.inner.init_state(grads_like))
 
     def sync(self, grads, state, axis_names):
-        import jax
         import jax.numpy as jnp
+
+        from repro.serverless.adversarial import get_attack
+        step, inner_state = state
         idx = _linear_axis_index(axis_names)
         bad = jnp.zeros((), bool)
         for w in self.workers:
             bad = jnp.logical_or(bad, idx == w)
-
-        def corrupt(g):
-            if self.mode == "scale":
-                evil = g * jnp.asarray(self.scale, g.dtype)
-            elif self.mode == "sign_flip":
-                evil = -g
-            elif self.mode == "zero":
-                evil = jnp.zeros_like(g)
-            else:
-                raise ValueError(self.mode)
-            return jnp.where(bad, evil, g)
-
-        return self.inner.sync(jax.tree.map(corrupt, grads), state,
-                               axis_names)
+        corrupted = get_attack(self.attack).jax_apply(
+            grads, bad, axis_names, self.scale, self.seed, step)
+        out, inner_state, info = self.inner.sync(corrupted, inner_state,
+                                                 axis_names)
+        return out, (step + 1, inner_state), info
 
     def comm_bytes(self, grads_like, n_workers):
         return self.inner.comm_bytes(grads_like, n_workers)

@@ -26,7 +26,11 @@ all-gathers the fleet's gradients and reduces with a byzantine-robust
 statistic instead of the mean.  They compose with
 ``faults.ByzantineGradients`` (corrupt-then-aggregate) and with SPIRT's
 microbatch accumulation (``microbatches=K``), and are reachable through
-``repro.core.get_strategy("trimmed_mean" | "coordinate_median")``.
+``repro.core.get_strategy("trimmed_mean" | "coordinate_median" |
+"krum" | "geometric_median")``.  The batched numpy twins the
+vectorized adversarial sweep uses live in
+``repro.serverless.adversarial`` (exactness pinned by
+``tests/test_adversarial.py``).
 """
 from __future__ import annotations
 
@@ -125,6 +129,63 @@ def coordinate_median(stacked):
     return jnp.median(stacked, axis=0)
 
 
+def krum(stacked, f: int = 1, m: int = 1):
+    """(Multi-)Krum (Blanchard et al., NeurIPS 2017) over axis 0 of a
+    ``[W, ...]`` stack: score every row by the summed squared distance
+    to its ``W - f - 2`` nearest neighbours (closer neighbourhoods =
+    more corroborated), then average the ``m`` lowest-scoring rows
+    (``m=1`` is classic Krum, ``m>1`` multi-Krum).  Selection needs an
+    honest majority with margin: ``W >= 2f + 3``."""
+    W = stacked.shape[0]
+    if f < 0:
+        raise ValueError(f"krum needs f >= 0, got f={f}")
+    if W < 2 * f + 3:
+        raise ValueError(
+            f"krum needs W >= 2f + 3 to out-vote f byzantine rows, got "
+            f"W={W}, f={f} (max feasible f is {(W - 3) // 2})")
+    if not 1 <= m <= W:
+        raise ValueError(f"krum needs 1 <= m <= W, got m={m}")
+    flat = stacked.reshape(W, -1).astype(jnp.float32)
+    d = jnp.sum((flat[:, None, :] - flat[None, :, :]) ** 2, axis=-1)
+    ds = jnp.sort(d, axis=-1)                  # col 0 is self (0.0)
+    scores = jnp.sum(ds[:, 1:W - f - 1], axis=-1)
+    sel = jnp.argsort(scores, stable=True)[:m]
+    return jnp.mean(stacked[sel].astype(jnp.float32), axis=0)
+
+
+def geometric_median(stacked, tol: float = 1e-6, max_iter: int = 100):
+    """Geometric median over axis 0 of a ``[W, ...]`` stack by
+    Weiszfeld iteration — the point minimizing the summed Euclidean
+    distance to every row; breakdown point (W-1)/2W.  Initialized at
+    the coordinate median; iterates until the step shrinks below
+    ``tol`` relative to the stack's largest row norm (tolerance-bounded)
+    or ``max_iter`` passes."""
+    if tol <= 0 or max_iter < 1:
+        raise ValueError(f"geometric_median needs tol > 0 and "
+                         f"max_iter >= 1, got tol={tol}, "
+                         f"max_iter={max_iter}")
+    W = stacked.shape[0]
+    flat = stacked.reshape(W, -1).astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.linalg.norm(flat, axis=-1)), 1e-12)
+
+    def body(carry):
+        z, _, i = carry
+        dist = jnp.linalg.norm(flat - z[None, :], axis=-1)
+        w = 1.0 / jnp.maximum(dist, 1e-12 * scale)
+        z_new = jnp.sum(w[:, None] * flat, axis=0) / jnp.sum(w)
+        return z_new, jnp.linalg.norm(z_new - z), i + 1
+
+    def cond(carry):
+        _, step, i = carry
+        return jnp.logical_and(i < max_iter, step > tol * scale)
+
+    z0 = jnp.median(flat, axis=0)
+    carry0 = (z0, jnp.asarray(jnp.inf, jnp.float32),
+              jnp.asarray(0, jnp.int32))
+    z, _, _ = jax.lax.while_loop(cond, body, carry0)
+    return z.reshape(stacked.shape[1:])
+
+
 # ---------------------------------------------------------------------------
 # Robust aggregation strategies
 # ---------------------------------------------------------------------------
@@ -195,3 +256,48 @@ class CoordinateMedian(_RobustAggregate):
 
     def _reduce(self, stacked):
         return coordinate_median(stacked)
+
+
+@dataclasses.dataclass(frozen=True)
+class Krum(_RobustAggregate):
+    """(Multi-)Krum selection: tolerates ``f`` byzantine workers given
+    ``W >= 2f + 3``; ``m`` selects multi-Krum averaging breadth.
+    Bounds are validated eagerly where possible (``f``/``m`` here, the
+    fleet-size condition when the first gradient stack arrives).
+
+    NOTE: Krum is a JOINT rule over the whole flattened gradient — the
+    flat-buffer ``sync`` (one selection for the full model) is the
+    semantics; ``sync_per_leaf`` would select per leaf independently,
+    a different (weaker) statistic."""
+    name: str = "krum"
+    f: int = 1
+    m: int = 1
+
+    def __post_init__(self):
+        if self.f < 0:
+            raise ValueError(f"krum needs f >= 0, got f={self.f}")
+        if self.m < 1:
+            raise ValueError(f"krum needs m >= 1, got m={self.m}")
+
+    def _reduce(self, stacked):
+        return krum(stacked, self.f, self.m)
+
+
+@dataclasses.dataclass(frozen=True)
+class GeometricMedian(_RobustAggregate):
+    """Weiszfeld geometric median: tolerates any byzantine minority
+    (< W/2) regardless of attack geometry, at the price of an
+    iterative reduce (``max_iter`` capped, ``tol``-bounded).  Like
+    Krum, a joint rule — the flat-buffer ``sync`` is the semantics."""
+    name: str = "geometric_median"
+    tol: float = 1e-6
+    max_iter: int = 100
+
+    def __post_init__(self):
+        if self.tol <= 0 or self.max_iter < 1:
+            raise ValueError(
+                f"geometric_median needs tol > 0 and max_iter >= 1, "
+                f"got tol={self.tol}, max_iter={self.max_iter}")
+
+    def _reduce(self, stacked):
+        return geometric_median(stacked, self.tol, self.max_iter)

@@ -37,11 +37,16 @@ from __future__ import annotations
 import dataclasses
 import multiprocessing
 import os
+import zlib
 from concurrent.futures import ProcessPoolExecutor
 from typing import Callable, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.serverless.adversarial import (SIM_AGGREGATORS,
+                                          byzantine_fractions, get_attack,
+                                          list_attacks,
+                                          sim_aggregator_max_f)
 from repro.serverless.archs import get_arch
 from repro.serverless.autoscale import ReactiveAutoscaler
 from repro.serverless.faults import FaultPlan
@@ -539,3 +544,185 @@ def sweep_events(points: Sequence[EventSweepPoint], *,
             cost_overhead_p50=float(np.percentile(over, 50)),
             cost_overhead_p95=float(np.percentile(over, 95))))
     return stats
+
+
+# ---------------------------------------------------------------------------
+# Layer 4: adversarial byzantine-fraction sweep (ROADMAP's last PR-1 item)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AdversarialGrid:
+    """Byzantine fraction x attack model x aggregator grid over the
+    deterministic quadratic-loss training path.
+
+    The simulated optimum is the origin: worker ``i``'s honest gradient
+    at step ``t`` is ``theta + noise[t, i]`` (quadratic loss
+    ``0.5 * ||theta||^2`` plus seeded per-worker minibatch noise), the
+    byzantine subset (the first ``round(fraction * W)`` workers —
+    exchangeable, since the noise is i.i.d.) corrupts its rows through
+    the registered attack model, and the aggregator's batched numpy
+    twin (``repro.serverless.adversarial.SIM_AGGREGATORS``) reduces the
+    stack — the same statistics real training applies on-device.  Empty
+    ``fractions`` / ``attacks`` / ``aggregators`` default to everything
+    registered: the full ladder 0 -> (W-1)/2W, every attack model, and
+    every ``SIM_AGGREGATORS`` statistic.
+
+    ``attack_scales`` overrides individual attacks' default magnitudes
+    (e.g. ``(("little_is_enough", 50.0),)``); robust aggregators are
+    configured with the oracle budget ``f = min(n_byz, feasible cap)``
+    so a curve's collapse past its cap IS the breakdown point.
+    """
+    n_workers: int = 12
+    dim: int = 24
+    steps: int = 80
+    lr: float = 0.25
+    noise: float = 0.05
+    init_dist: float = 4.0
+    converge_tol: float = 0.25
+    fractions: Tuple[float, ...] = ()
+    attacks: Tuple[str, ...] = ()
+    aggregators: Tuple[str, ...] = ()
+    attack_scales: Tuple[Tuple[str, float], ...] = ()
+
+    def __post_init__(self):
+        if self.n_workers < 3:
+            raise ValueError(f"n_workers must be >= 3, got "
+                             f"{self.n_workers}")
+        for field, lo in (("dim", 1), ("steps", 1)):
+            if getattr(self, field) < lo:
+                raise ValueError(f"{field} must be >= {lo}, got "
+                                 f"{getattr(self, field)}")
+        for field in ("lr", "init_dist", "converge_tol"):
+            if getattr(self, field) <= 0:
+                raise ValueError(f"{field} must be > 0, got "
+                                 f"{getattr(self, field)}")
+        if not np.isfinite(self.noise) or self.noise < 0:
+            raise ValueError(f"noise must be finite and >= 0, got "
+                             f"{self.noise}")
+        for a in self.aggregators:
+            # unknown names fail HERE with the registered list, not as
+            # a bare KeyError mid-sweep
+            sim_aggregator_max_f(a, self.n_workers)
+
+    # empty tuple = everything registered, mirroring fractions/attacks
+    # (a third-party SIM_AGGREGATORS entry shows up in default sweeps
+    # with no edits here)
+    def resolved_aggregators(self) -> Tuple[str, ...]:
+        return self.aggregators or tuple(SIM_AGGREGATORS)
+
+    def resolved_attacks(self) -> Tuple[str, ...]:
+        return self.attacks or list_attacks()
+
+    def resolved_fractions(self) -> Tuple[float, ...]:
+        return self.fractions or byzantine_fractions(self.n_workers)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdversarialCell:
+    """One (aggregator, attack, fraction) result row.  A trajectory
+    that overflows clean through inf reports ``final_dist=inf`` (never
+    NaN), so same-seed sweeps always compare ``==`` cell for cell."""
+    aggregator: str
+    attack: str
+    fraction: float
+    n_byz: int
+    f_used: int                        # oracle byzantine budget applied
+    final_dist: float                  # |theta - theta*| after `steps`
+    min_dist: float
+    converged_step: int                # first step <= converge_tol; -1
+    diverged: bool                     # left the 10x init_dist ball
+
+
+def _adv_rng(seed: int, *key: int) -> np.random.Generator:
+    return np.random.default_rng(
+        np.random.SeedSequence(entropy=seed, spawn_key=tuple(key)))
+
+
+def adversarial_sweep(grid: AdversarialGrid, *,
+                      seed: int = 0) -> List[AdversarialCell]:
+    """Evaluate the whole grid, vectorized over the fraction axis (one
+    ``[n_fractions, W, dim]`` array-op block per step per
+    (aggregator, attack) pair) and bit-reproducible from
+    ``(grid, seed)`` — the same seeding discipline as
+    :func:`sweep_events`: honest minibatch noise and the stochastic
+    attacks draw from disjoint ``SeedSequence`` sub-streams, and the
+    honest stream is SHARED across every cell so curves differ only by
+    the adversarial configuration."""
+    W, D = grid.n_workers, grid.dim
+    fractions = grid.resolved_fractions()
+    attacks = grid.resolved_attacks()
+    scales = dict(grid.attack_scales)
+    for name in scales:
+        get_attack(name)               # unknown override -> actionable
+    n_byz = np.asarray([int(round(f * W)) for f in fractions])
+    if np.any(n_byz < 0) or np.any(n_byz > (W - 1) // 2):
+        raise ValueError(
+            f"fractions {tuple(fractions)} leave the aggregatable range:"
+            f" byzantine counts {n_byz.tolist()} must stay within "
+            f"[0, (W-1)//2] = [0, {(W - 1) // 2}] at W={W}")
+    byz_mask = np.arange(W) < n_byz[:, None]           # [n_frac, W]
+
+    honest_noise = _adv_rng(seed, 0).standard_normal(
+        (grid.steps, W, D)) * grid.noise
+    direction = _adv_rng(seed, 1).standard_normal(D)
+    theta0 = direction / max(np.linalg.norm(direction), 1e-12) \
+        * grid.init_dist
+
+    cells: List[AdversarialCell] = []
+    for agg_name in grid.resolved_aggregators():
+        agg = SIM_AGGREGATORS[agg_name]
+        f_used = np.minimum(n_byz, sim_aggregator_max_f(agg_name, W))
+        for attack_name in attacks:
+            spec = get_attack(attack_name)
+            scale = scales.get(attack_name, spec.default_scale)
+            # sub-stream keyed by the attack NAME (crc32, not its grid
+            # or registry position): stochastic attacks replay
+            # identically when the grid shrinks elsewhere, and every
+            # aggregator block re-creates the same generator so the
+            # chart panels compare aggregators on IDENTICAL corrupted
+            # inputs
+            arng = _adv_rng(seed, 2,
+                            zlib.crc32(attack_name.encode("utf-8")))
+            theta = np.tile(theta0, (len(n_byz), 1))
+            dist = np.empty((grid.steps + 1, len(n_byz)))
+            dist[0] = grid.init_dist
+            with np.errstate(over="ignore", invalid="ignore"):
+                for t in range(grid.steps):
+                    g = theta[:, None, :] + honest_noise[t][None]
+                    g = spec.apply_rows(g, byz_mask, arng, scale)
+                    theta = theta - grid.lr * agg(g, f_used)
+                    dist[t + 1] = np.linalg.norm(theta, axis=-1)
+            below = dist <= grid.converge_tol          # [steps+1, n_frac]
+            first = np.where(below.any(axis=0),
+                             below.argmax(axis=0), -1)
+            final = dist[-1]
+            for i, frac in enumerate(fractions):
+                fin = float(final[i])
+                diverged = bool(not np.isfinite(fin)
+                                or fin > 10.0 * grid.init_dist)
+                if not np.isfinite(fin):
+                    # overflow poisons the float through inf to NaN;
+                    # report inf so NaN != NaN can never break the
+                    # same-seed equality contract (min_dist is always
+                    # finite: dist[0] = init_dist)
+                    fin = float("inf")
+                cells.append(AdversarialCell(
+                    aggregator=agg_name, attack=attack_name,
+                    fraction=float(frac), n_byz=int(n_byz[i]),
+                    f_used=int(f_used[i]), final_dist=fin,
+                    min_dist=float(np.nanmin(dist[:, i])),
+                    converged_step=int(first[i]), diverged=diverged))
+    return cells
+
+
+def adversarial_curve(cells: Sequence[AdversarialCell], aggregator: str,
+                      attack: str, metric: str = "final_dist"
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """One degradation curve: ``(fractions, metric values)`` sorted by
+    fraction for a given (aggregator, attack) pair."""
+    rows = sorted(((c.fraction, getattr(c, metric)) for c in cells
+                   if c.aggregator == aggregator and c.attack == attack))
+    if not rows:
+        raise ValueError(f"no cells for aggregator={aggregator!r}, "
+                         f"attack={attack!r}")
+    fr, val = zip(*rows)
+    return np.asarray(fr), np.asarray(val, float)
