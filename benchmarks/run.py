@@ -3,7 +3,7 @@
 Prints ``name,value,derived`` CSV rows.  Usage:
     PYTHONPATH=src python -m benchmarks.run [--only table2|fig23|table3|
         roofline|strategy_matrix|fault_tolerance|sweep|knee|trace|
-        adversarial]
+        adversarial|serving]
 """
 from __future__ import annotations
 
@@ -19,7 +19,7 @@ def main() -> None:
 
     from benchmarks import (adversarial_curves, fault_tolerance,
                             fig23_comm, pareto_sweep, roofline_report,
-                            strategy_matrix, table2_cost,
+                            serving_sweep, strategy_matrix, table2_cost,
                             table3_convergence, trace_replay)
     suites = {
         "table2": table2_cost.run,
@@ -32,6 +32,7 @@ def main() -> None:
         "knee": pareto_sweep.run_knee,
         "trace": trace_replay.run,
         "adversarial": adversarial_curves.run,
+        "serving": serving_sweep.run,
     }
     if args.only:
         suites = {args.only: suites[args.only]}

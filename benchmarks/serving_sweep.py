@@ -1,0 +1,297 @@
+"""Serving fleet: latency/cost Pareto fronts + analytic throughput.
+
+The serving twin of ``benchmarks/pareto_sweep.py`` — the training
+benchmarks answer "what does an epoch cost"; this one answers the
+north star's other half: what do the registered architectures' cost /
+latency trade-offs look like under live inference traffic.  Three
+sections, recorded in ``BENCH_serving.json``:
+
+  1. *Analytic throughput* — the vectorized M/G/c grid
+     (``repro.serving.steady_state.serving_sweep_analytic``) over
+     arch x replicas x RAM x arrival-rate, timed; the record is
+     simulated requests per wall-clock second (the grid covers
+     ``n_points x n_requests`` requests) with a >= 1M/s floor pinned
+     by a slow-marked test in ``tests/test_serving_fleet.py``.
+  2. *Agreement* — the closed form vs the request-level event engine
+     (``repro.serving.fleet.FleetSim``) on overlapping stable grid
+     points: max relative error on mean latency, recorded so drift in
+     either path shows up in the bench trail.
+  3. *Pareto fronts* — per architecture, the non-dominated
+     (usd_per_1k_requests, latency) points of the stable grid for each
+     of p50/p95/p99, plus a matplotlib-gated chart
+     (``serving_pareto.png``).
+
+Everything downstream of ``(grid, SEED)`` is closed-form or seeded, so
+``BENCH_serving.json`` is bit-reproducible run over run; the payload
+records its own content hash.  Architectures come from
+``repro.serverless.archs.list_archs()`` — a newly registered ArchSpec
+shows up in every section with no edits here.
+
+Rows: serving/<section>/<name>,value,notes
+Usage:
+    PYTHONPATH=src python -m benchmarks.serving_sweep [--quick]
+        [--only throughput|agreement|pareto]
+        [--json BENCH_serving.json] [--chart serving_pareto.png]
+    PYTHONPATH=src python -m benchmarks.run --only serving
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import time
+
+import numpy as np
+
+from repro.serverless.archs import list_archs
+from repro.serverless.sweep import pareto_front
+from repro.serving.fleet import FleetSim
+from repro.serving.steady_state import ServingGrid, serving_sweep_analytic
+from repro.serving.workload import Workload
+
+SECTIONS = ("throughput", "agreement", "pareto")
+SEED = 42
+PCTS = ("p50", "p95", "p99")
+
+
+def _grid(quick: bool) -> ServingGrid:
+    if quick:
+        return ServingGrid(
+            replicas=(1, 2, 4), ram_gb=(2.0, 4.0),
+            rate_rps=(0.1, 0.25, 0.5, 1.0, 2.0, 4.0))
+    return ServingGrid(
+        replicas=(1, 2, 4, 8), ram_gb=(1.0, 2.0, 3.0, 4.0),
+        rate_rps=(0.1, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0))
+
+
+def bench_throughput(csv_rows, quick: bool) -> dict:
+    grid = _grid(quick)
+    serving_sweep_analytic(grid)                 # warm numpy / imports
+    t = min(_timed(lambda: serving_sweep_analytic(grid))
+            for _ in range(3))
+    sw = serving_sweep_analytic(grid)
+    req_per_s = sw.requests_simulated / t
+    csv_rows.append(("serving/throughput/points", len(sw),
+                     f"{len(grid.resolved_archs())} archs"))
+    csv_rows.append(("serving/throughput/requests_simulated",
+                     sw.requests_simulated,
+                     f"{grid.n_requests} per point"))
+    csv_rows.append(("serving/throughput/requests_per_s", req_per_s,
+                     "analytic grid; floor 1e6 pinned in tests"))
+    return dict(points=len(sw),
+                requests_simulated=sw.requests_simulated,
+                elapsed_s=t, requests_per_s=req_per_s)
+
+
+def agreement_cases(quick: bool):
+    """Overlapping grid points for the two engines: stable,
+    moderately loaded, cold-start-free (steady state has none)."""
+    n = 2_000 if quick else 5_000
+    wl = Workload(n_requests=n, rate_rps=1.0,
+                  prompt_tokens=256, decode_tokens=64)
+    return [
+        (FleetSim(arch="spirt", replicas=2, batch_size=8,
+                  cold_start_s=0.0), wl.with_rate(2.0)),
+        (FleetSim(arch="spirt", replicas=1, batch_size=8, ram_gb=4.0,
+                  cold_start_s=0.0), wl.with_rate(2.0)),
+        (FleetSim(arch="gpu", replicas=2, batch_size=8,
+                  cold_start_s=0.0), wl.with_rate(4.0)),
+    ]
+
+
+def bench_agreement(csv_rows, quick: bool) -> dict:
+    from repro.serving.steady_state import analytic_point
+    rows = []
+    worst = 0.0
+    for sim, wl in agreement_cases(quick):
+        rep = sim.run(wl.generate(SEED))
+        ana = analytic_point(sim, wl)
+        rel = abs(rep.mean_latency_s - ana["mean_latency_s"]) \
+            / rep.mean_latency_s
+        worst = max(worst, rel)
+        label = f"{sim.arch}/R{sim.replicas}/ram{sim.ram_gb:g}" \
+                f"/rps{wl.rate_rps:g}"
+        rows.append(dict(label=label, rho=float(ana["rho"]),
+                         event_mean_s=rep.mean_latency_s,
+                         analytic_mean_s=float(ana["mean_latency_s"]),
+                         event_p95_s=rep.latency_p95_s,
+                         analytic_p95_s=float(ana["latency_p95_s"]),
+                         rel_err_mean=rel))
+        csv_rows.append((f"serving/agreement/{label}", rel,
+                         f"event={rep.mean_latency_s:.3f}s "
+                         f"analytic={ana['mean_latency_s']:.3f}s "
+                         f"rho={ana['rho']:.2f}"))
+    csv_rows.append(("serving/agreement/max_rel_err_mean", worst,
+                     "tolerance pinned in tests"))
+    return dict(cases=rows, max_rel_err_mean=worst)
+
+
+def bench_pareto(csv_rows, quick: bool,
+                 chart_path="serving_pareto.png") -> dict:
+    grid = _grid(quick)
+    sw = serving_sweep_analytic(grid)
+    fronts = {}
+    for arch in grid.resolved_archs():
+        idx = np.flatnonzero((sw.arch == arch) & sw.stable)
+        rows = []
+        front_sets = {}
+        for pct in PCTS:
+            lat = getattr(sw, f"latency_{pct}_s")[idx]
+            cost = sw.usd_per_1k_requests[idx]
+            front_sets[pct] = set(
+                int(idx[k]) for k in pareto_front(cost, lat))
+        for j in idx:
+            on = {pct: int(j) in front_sets[pct] for pct in PCTS}
+            if not any(on.values()):
+                continue                  # record front points only
+            rows.append(dict(
+                replicas=int(sw.replicas[j]),
+                ram_gb=float(sw.ram_gb[j]),
+                rate_rps=float(sw.rate_rps[j]),
+                rho=float(sw.rho[j]),
+                latency_p50_s=float(sw.latency_p50_s[j]),
+                latency_p95_s=float(sw.latency_p95_s[j]),
+                latency_p99_s=float(sw.latency_p99_s[j]),
+                usd_per_1k_requests=float(sw.usd_per_1k_requests[j]),
+                on_front={p: on[p] for p in PCTS}))
+        fronts[arch] = dict(stable_points=int(idx.size),
+                            swept_points=int((sw.arch == arch).sum()),
+                            front=sorted(
+                                rows,
+                                key=lambda r: r["usd_per_1k_requests"]))
+        p95_front = [r for r in fronts[arch]["front"]
+                     if r["on_front"]["p95"]]
+        # non-dominated by construction: cost strictly up, p95 down
+        for a, b in zip(p95_front, p95_front[1:]):
+            assert b["usd_per_1k_requests"] >= a["usd_per_1k_requests"]
+            assert b["latency_p95_s"] < a["latency_p95_s"]
+        csv_rows.append((f"serving/pareto/{arch}/front_size",
+                         len(p95_front),
+                         f"of {idx.size} stable configs (p95 front)"))
+        for r in p95_front:
+            csv_rows.append((
+                f"serving/pareto/{arch}/R{r['replicas']}"
+                f"-ram{r['ram_gb']:g}-rps{r['rate_rps']:g}/usd_per_1k",
+                r["usd_per_1k_requests"],
+                f"p50={r['latency_p50_s']:.2f}s "
+                f"p95={r['latency_p95_s']:.2f}s "
+                f"p99={r['latency_p99_s']:.2f}s"))
+    chart = _pareto_chart(fronts, chart_path)
+    if chart:
+        csv_rows.append(("serving/pareto/_chart", 1, chart))
+    return dict(grid=dict(replicas=list(grid.replicas),
+                          ram_gb=list(grid.ram_gb),
+                          rate_rps=list(grid.rate_rps),
+                          batch_size=grid.batch_size,
+                          n_requests=grid.n_requests),
+                fronts=fronts, chart=chart)
+
+
+# palette shared with the training benches (colorblind-safe order)
+_SERIES_COLORS = ("#2a78d6", "#eb6834", "#1baf7a", "#eda100", "#e87ba4",
+                  "#008300", "#4a3aa7", "#e34948")
+_SURFACE, _INK, _INK2 = "#fcfcfb", "#0b0b0b", "#52514e"
+
+
+def _pareto_chart(fronts, path):
+    """p95-latency-vs-cost fronts, one line per architecture; returns
+    the path or None when matplotlib is unavailable."""
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        return None
+    fig, ax = plt.subplots(figsize=(7.5, 4.5), dpi=144)
+    fig.patch.set_facecolor(_SURFACE)
+    ax.set_facecolor(_SURFACE)
+    for i, (arch, data) in enumerate(fronts.items()):
+        pts = [r for r in data["front"] if r["on_front"]["p95"]]
+        if not pts:
+            continue
+        c = _SERIES_COLORS[i % len(_SERIES_COLORS)]
+        xs = [r["usd_per_1k_requests"] for r in pts]
+        ys = [r["latency_p95_s"] for r in pts]
+        ax.plot(xs, ys, "o-", color=c, linewidth=2, markersize=4,
+                markeredgecolor=_SURFACE, markeredgewidth=0.8,
+                label=arch, zorder=3)
+    ax.set_xscale("log")
+    ax.set_yscale("log")
+    ax.set_xlabel("cost (USD per 1k requests)", color=_INK2)
+    ax.set_ylabel("p95 latency (s)", color=_INK2)
+    ax.set_title("Serving Pareto fronts: p95 latency vs cost per "
+                 "architecture", color=_INK, loc="left")
+    ax.grid(True, color="#e7e6e3", linewidth=0.8, zorder=0)
+    for s in ("top", "right"):
+        ax.spines[s].set_visible(False)
+    for s in ("left", "bottom"):
+        ax.spines[s].set_color("#d7d6d2")
+    ax.tick_params(colors=_INK2, which="both")
+    ax.legend(frameon=False, fontsize=8, ncol=2, labelcolor=_INK)
+    fig.tight_layout()
+    fig.savefig(path, facecolor=_SURFACE)
+    plt.close(fig)
+    return path
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _content_hash(payload: dict) -> str:
+    """Hash of the deterministic payload (timings excluded) — the
+    bit-reproducibility receipt the tests re-derive."""
+    det = {k: v for k, v in payload.items() if k != "throughput"}
+    blob = json.dumps(det, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def run(csv_rows, *, quick: bool = False,
+        json_path: str = "BENCH_serving.json", only=None,
+        chart: str = "serving_pareto.png"):
+    sections = SECTIONS if only is None else (only,)
+    payload = {"benchmark": "serving_sweep", "quick": quick,
+               "seed": SEED}
+    if "throughput" in sections:
+        payload["throughput"] = bench_throughput(csv_rows, quick)
+    if "agreement" in sections:
+        payload["agreement"] = bench_agreement(csv_rows, quick)
+    if "pareto" in sections:
+        payload["pareto"] = bench_pareto(csv_rows, quick,
+                                         chart_path=chart)
+    payload["content_hash"] = _content_hash(payload)
+    csv_rows.append(("serving/_content_hash", payload["content_hash"],
+                     "sha256[:16] of the deterministic sections"))
+    # only a run of ALL sections may replace the TRACKED
+    # BENCH_serving.json (the PR 4 rule: a --only iteration must not
+    # overwrite the record with a partial payload); an explicit
+    # non-default --json path is always honoured
+    if json_path and (only is None or json_path != "BENCH_serving.json"):
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        csv_rows.append(("serving/_json", 1, json_path))
+    return csv_rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller grid / fewer event requests (CI)")
+    ap.add_argument("--only", default=None, choices=SECTIONS)
+    ap.add_argument("--json", default="BENCH_serving.json",
+                    help="payload path; with --only, the tracked "
+                         "default is left untouched")
+    ap.add_argument("--chart", default="serving_pareto.png")
+    args = ap.parse_args()
+    rows = []
+    run(rows, quick=args.quick, json_path=args.json, only=args.only,
+        chart=args.chart)
+    print("name,value,derived")
+    for name, value, notes in rows:
+        print(f"{name},{value},{str(notes).replace(',', ';')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,10 @@ The whole serverless stack (analytic simulator, vectorized sweeps,
 discrete-event runtime with faults/recovery/autoscaling, trace replay,
 Pareto/knee benchmarks) resolves architectures through the
 ``repro.serverless.archs`` registry, so one ``ArchSpec`` is the entire
-integration surface.
+integration surface — and that includes the serving subsystem: a
+third-party spec flows into ``repro.serving`` fleet runs and
+latency/cost sweeps (``benchmarks/serving_sweep.py``) through its
+``fleet_cost`` / ``ram_scales_compute`` fields, no serving-side edits.
 
 The example arch, ``tree_allreduce``, replaces λML AllReduce's serial
 master with a binary aggregation tree over the channel: each sync is
@@ -76,6 +79,16 @@ def main():
         n_replicates=4, seed=1, processes=1)
     print(f"event sweep: p95 makespan {stats[0].makespan_p95_s:.1f}s, "
           f"cost overhead {stats[0].cost_overhead_mean:+.1%}")
+
+    # ... and into the serving subsystem: the spec's billing and
+    # RAM-scaling fields are all the fleet sim / M/G/c sweep need
+    from repro.serving import ServingGrid, serving_sweep_analytic
+    sv = serving_sweep_analytic(ServingGrid(archs=("tree_allreduce",),
+                                            replicas=(2,),
+                                            ram_gb=(2.0,),
+                                            rate_rps=(1.0,)))
+    print(f"serving sweep: p95 latency {sv.latency_p95_s[0]:.1f}s at "
+          f"${sv.usd_per_1k_requests[0]:.4f}/1k requests")
 
 
 if __name__ == "__main__":

@@ -29,7 +29,8 @@ from repro.serverless.autoscale import (  # noqa: F401
     ReactiveAutoscaler, ScheduledScaler,
 )
 from repro.serverless.traces import (  # noqa: F401
-    LAMBDA_2105_07806, Trace, lambda_default,
+    AZURE_LLM_2311_18677, LAMBDA_2105_07806, RequestTrace, Trace,
+    lambda_default, request_default,
 )
 from repro.serverless.sweep import (  # noqa: F401
     AdversarialCell, AdversarialGrid, AnalyticSweep, EventPointStats,

@@ -13,6 +13,13 @@ holds empirical samples of those distributions, and
 into replayable per-worker fault plans via inverse CDF over seeded
 sub-streams, so every (trace, seed) pair is bit-reproducible.
 
+The same machinery backs the *serving* side: :class:`RequestTrace`
+holds measured request-level traffic (inter-arrival gaps, prompt and
+decode token counts — the bundled default digitizes the Splitwise /
+Azure LLM-inference distributions, arXiv 2311.18677) and
+``repro.serving.workload.Workload`` resamples it into seeded open-loop
+request streams for the continuous-batching fleet simulator.
+
 Trace schema
 ------------
 JSON — one object with the three sample arrays plus the per-epoch
@@ -71,6 +78,50 @@ import numpy as np
 _FIELDS = ("cold_start_s", "straggler_slowdown", "straggler_duration_s")
 
 
+# ---------------------------------------------------------------------------
+# Shared empirical-distribution machinery (fault + request traces)
+# ---------------------------------------------------------------------------
+def _sorted_samples(owner: str, field: str, values) -> Tuple[float, ...]:
+    """Validate and sort one sample array (finite, >= 0)."""
+    vals = tuple(sorted(float(v) for v in values))
+    if any(not math.isfinite(v) or v < 0 for v in vals):
+        raise ValueError(f"{owner}.{field}: samples must be finite and "
+                         f">= 0, got {vals}")
+    return vals
+
+
+def _inverse_cdf(samples: Tuple[float, ...], u, *, trace_name: str,
+                 field: str):
+    """Inverse empirical CDF: map uniforms ``u`` in [0, 1) to observed
+    samples (pure bootstrap — no interpolation, so every resampled value
+    is a member of the trace's support).  u is clipped at BOTH ends: a
+    negative u must not wrap to the top of the distribution through
+    negative indexing."""
+    s = np.asarray(samples, float)             # sorted tuple
+    if s.size == 0:
+        raise ValueError(f"trace {trace_name!r}: no {field} samples")
+    idx = np.clip((np.asarray(u) * s.size).astype(int), 0, s.size - 1)
+    return s[idx]
+
+
+def _long_csv_fields(path: str, field_names: Tuple[str, ...],
+                     scalars: Tuple[str, ...] = ()) -> Tuple[dict, dict]:
+    """Parse a long-format ``field,value`` CSV into sample lists (one
+    per entry of ``field_names``) plus scalar rows (``scalars``)."""
+    fields = {f: [] for f in field_names}
+    scalar_vals: dict = {}
+    with open(path) as f:
+        for row in csv.DictReader(f):
+            key, val = row["field"], float(row["value"])
+            if key in scalars:
+                scalar_vals[key] = val
+            elif key in fields:
+                fields[key].append(val)
+            else:
+                raise ValueError(f"unknown trace field {key!r}")
+    return fields, scalar_vals
+
+
 @dataclasses.dataclass(frozen=True)
 class Trace:
     """Empirical distributions for trace-driven fault replay.
@@ -87,11 +138,8 @@ class Trace:
 
     def __post_init__(self):
         for field in _FIELDS:
-            vals = tuple(sorted(float(v) for v in getattr(self, field)))
-            if any(not math.isfinite(v) or v < 0 for v in vals):
-                raise ValueError(f"{field}: samples must be finite and "
-                                 f">= 0, got {vals}")
-            object.__setattr__(self, field, vals)
+            object.__setattr__(self, field, _sorted_samples(
+                "Trace", field, getattr(self, field)))
         if not self.cold_start_s:
             raise ValueError("cold_start_s needs at least one sample")
         if not 0.0 <= self.straggler_prob <= 1.0:
@@ -107,18 +155,13 @@ class Trace:
 
     # ---------------------------------------------------------- sampling
     def sample(self, field: str, u):
-        """Inverse empirical CDF: map uniforms ``u`` in [0, 1) to
-        observed samples (pure bootstrap — no interpolation, so every
-        resampled value is a member of the trace's support)."""
+        """Inverse empirical CDF over ``field`` (see
+        :func:`_inverse_cdf`: bootstrap resampling, both ends of u
+        clipped)."""
         if field not in _FIELDS:
             raise KeyError(field)
-        s = np.asarray(getattr(self, field), float)   # sorted tuple
-        if s.size == 0:
-            raise ValueError(f"trace {self.name!r}: no {field} samples")
-        # clip both ends: u < 0 must not wrap to the top of the
-        # distribution through negative indexing
-        idx = np.clip((np.asarray(u) * s.size).astype(int), 0, s.size - 1)
-        return s[idx]
+        return _inverse_cdf(getattr(self, field), u,
+                            trace_name=self.name, field=field)
 
     def support(self, field: str) -> Tuple[float, float]:
         vals = getattr(self, field)
@@ -146,18 +189,10 @@ class Trace:
     @classmethod
     def from_csv(cls, path: str, *, name: Optional[str] = None) -> "Trace":
         """Long-format ``field,value`` CSV (see module docstring)."""
-        fields = {f: [] for f in _FIELDS}
-        prob = 0.0
-        with open(path) as f:
-            for row in csv.DictReader(f):
-                key, val = row["field"], float(row["value"])
-                if key == "straggler_prob":
-                    prob = val
-                elif key in fields:
-                    fields[key].append(val)
-                else:
-                    raise ValueError(f"unknown trace field {key!r}")
-        return cls(name=name or path, straggler_prob=prob,
+        fields, scalars = _long_csv_fields(path, _FIELDS,
+                                           scalars=("straggler_prob",))
+        return cls(name=name or path,
+                   straggler_prob=scalars.get("straggler_prob", 0.0),
                    **{k: tuple(v) for k, v in fields.items()})
 
 
@@ -183,3 +218,127 @@ LAMBDA_2105_07806 = Trace(
 def lambda_default() -> Trace:
     """The bundled Lambda-like trace digitized from arXiv 2105.07806."""
     return LAMBDA_2105_07806
+
+
+# ---------------------------------------------------------------------------
+# Request traces: the serving twin of the fault trace
+# ---------------------------------------------------------------------------
+_REQUEST_FIELDS = ("inter_arrival_s", "prompt_tokens", "decode_tokens")
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestTrace:
+    """Empirical request-level distributions for serving workloads.
+
+    The inference-side twin of :class:`Trace`: where the fault trace
+    holds measured cold-start/straggler tails, a request trace holds
+    measured *traffic* — request inter-arrival gaps plus prompt and
+    decode token counts — and ``repro.serving.workload.Workload``
+    resamples it into seeded, replayable open-loop request streams by
+    the same inverse-CDF-over-sub-streams discipline.
+
+    Schema mirrors :class:`Trace`: JSON is one object with the three
+    sample arrays plus ``name``; CSV is long-format ``field,value``
+    rows.  ``inter_arrival_s`` samples are absolute gaps in seconds
+    (their mean is the trace's native arrival rate — ``Workload`` can
+    rescale them to sweep rates without touching the burstiness shape);
+    token counts are positive integers.
+    """
+    inter_arrival_s: Tuple[float, ...]
+    prompt_tokens: Tuple[float, ...] = ()
+    decode_tokens: Tuple[float, ...] = ()
+    name: str = "custom"
+
+    def __post_init__(self):
+        for field in _REQUEST_FIELDS:
+            object.__setattr__(self, field, _sorted_samples(
+                "RequestTrace", field, getattr(self, field)))
+        if not self.inter_arrival_s:
+            raise ValueError("inter_arrival_s needs at least one sample")
+        for field in ("prompt_tokens", "decode_tokens"):
+            vals = getattr(self, field)
+            if any(v < 1 or v != int(v) for v in vals):
+                raise ValueError(f"{field}: token counts must be "
+                                 f"positive integers, got {vals}")
+
+    # ---------------------------------------------------------- sampling
+    def sample(self, field: str, u):
+        """Inverse empirical CDF over ``field`` (bootstrap resampling;
+        see :func:`_inverse_cdf`)."""
+        if field not in _REQUEST_FIELDS:
+            raise KeyError(field)
+        return _inverse_cdf(getattr(self, field), u,
+                            trace_name=self.name, field=field)
+
+    def support(self, field: str) -> Tuple[float, float]:
+        vals = getattr(self, field)
+        return (vals[0], vals[-1])
+
+    def quantile(self, field: str, q: float) -> float:
+        return float(self.sample(field, q))
+
+    def mean_rate_rps(self) -> float:
+        """The trace's native arrival rate (1 / mean inter-arrival)."""
+        return 1.0 / float(np.mean(self.inter_arrival_s))
+
+    # ---------------------------------------------------------- file I/O
+    def to_json(self, path: str) -> None:
+        payload = dict(name=self.name,
+                       **{f: list(getattr(self, f))
+                          for f in _REQUEST_FIELDS})
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+
+    @classmethod
+    def from_json(cls, path: str) -> "RequestTrace":
+        with open(path) as f:
+            payload = json.load(f)
+        unknown = set(payload) - set(_REQUEST_FIELDS) - {"name"}
+        if unknown:
+            raise ValueError(f"unknown trace fields: {sorted(unknown)}")
+        return cls(**payload)
+
+    @classmethod
+    def from_csv(cls, path: str, *,
+                 name: Optional[str] = None) -> "RequestTrace":
+        """Long-format ``field,value`` CSV (same shape as
+        :meth:`Trace.from_csv`)."""
+        fields, _ = _long_csv_fields(path, _REQUEST_FIELDS)
+        return cls(name=name or path,
+                   **{k: tuple(v) for k, v in fields.items()})
+
+
+# ---------------------------------------------------------------------------
+# Bundled default request trace.  Quantile-grid approximation of the
+# production LLM-inference traffic shape reported by Splitwise (arXiv
+# 2311.18677, Azure conversation workload): prompts with a ~1k-token
+# median and a long right tail, decode lengths with a ~100-token median
+# and a heavy tail to ~1k, and bursty arrivals (inter-arrival p95 an
+# order of magnitude above the median — NOT exponential).  Digitized
+# from the published distribution curves, not copied from raw data; it
+# exists so the serving benchmarks can compare measured-burstiness
+# behaviour against Poisson arrivals without network access.  The
+# native rate is ~1 req/s; ``Workload.with_rate`` rescales gaps to any
+# target rate while preserving the burstiness shape.
+# ---------------------------------------------------------------------------
+_LLM_INTER_ARRIVAL_S = (
+    0.02, 0.05, 0.09, 0.14, 0.20, 0.27, 0.35, 0.44, 0.55, 0.68,
+    0.83, 1.00, 1.20, 1.45, 1.80, 2.30, 3.10, 4.50, 7.00, 12.0)
+_LLM_PROMPT_TOKENS = (
+    64, 128, 256, 384, 512, 640, 768, 896, 1024, 1152,
+    1280, 1472, 1664, 1920, 2304, 2816, 3584, 4608, 6144, 8192)
+_LLM_DECODE_TOKENS = (
+    8, 16, 24, 36, 48, 64, 80, 96, 112, 128,
+    148, 172, 200, 240, 296, 376, 496, 672, 896, 1024)
+
+AZURE_LLM_2311_18677 = RequestTrace(
+    name="azure-llm-2311.18677",
+    inter_arrival_s=_LLM_INTER_ARRIVAL_S,
+    prompt_tokens=_LLM_PROMPT_TOKENS,
+    decode_tokens=_LLM_DECODE_TOKENS)
+
+
+def request_default() -> RequestTrace:
+    """The bundled LLM-serving request trace digitized from the
+    Splitwise (arXiv 2311.18677) conversation-workload distributions."""
+    return AZURE_LLM_2311_18677

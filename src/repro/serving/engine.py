@@ -80,18 +80,25 @@ class ServingEngine:
 
     def _admit(self):
         for slot in range(self.B):
-            if self.slots[slot] is not None or not self.queue:
-                continue
-            req = self.queue.popleft()
-            logits, cache1 = self._prefill(
-                self.params, {"tokens": jnp.asarray(req.prompt[None, :])})
-            self.cache = _scatter_request(self.cache, cache1, slot)
-            tok = int(np.argmax(np.asarray(
-                logits[0, -1, :self.model.cfg.vocab_size])))
-            req.generated.append(tok)
-            self.tokens[slot, 0] = tok
-            self.positions[slot] = len(req.prompt)
-            self.slots[slot] = req
+            # a request can finish AT prefill (max_new_tokens=1, or the
+            # first token is eos): it never occupies the slot, which
+            # stays free for the next queued request
+            while self.slots[slot] is None and self.queue:
+                req = self.queue.popleft()
+                logits, cache1 = self._prefill(
+                    self.params,
+                    {"tokens": jnp.asarray(req.prompt[None, :])})
+                tok = int(np.argmax(np.asarray(
+                    logits[0, -1, :self.model.cfg.vocab_size])))
+                req.generated.append(tok)
+                if len(req.generated) >= req.max_new_tokens or \
+                        (req.eos_id is not None and tok == req.eos_id):
+                    self.finished[req.rid] = req
+                    continue
+                self.cache = _scatter_request(self.cache, cache1, slot)
+                self.tokens[slot, 0] = tok
+                self.positions[slot] = len(req.prompt)
+                self.slots[slot] = req
 
     def _retire(self, slot: int):
         req = self.slots[slot]

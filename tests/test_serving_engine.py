@@ -58,3 +58,101 @@ def test_engine_more_requests_than_slots():
     out = engine.run()
     assert len(out) == 5
     assert all(len(v) == 3 for v in out.values())
+
+
+# ---------------------------------------------------------------------
+# Regression pins for the FleetSim per-replica model
+# (src/repro/serving/fleet.py cites exactly these semantics)
+# ---------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def small():
+    cfg = get_config("smollm-135m").reduced()
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, n, lens, seed=2):
+    rs = np.random.RandomState(seed)
+    return [rs.randint(0, cfg.vocab_size, L).astype(np.int32)
+            for L in lens[:n]]
+
+
+def test_slot_reuse_after_retire(small):
+    """A retired slot admits the next queued request immediately (no
+    head-of-line blocking), and reuse does not corrupt outputs."""
+    cfg, model, params = small
+    prompts = _prompts(cfg, 4, (6, 9, 5, 7))
+    n_new = [2, 5, 3, 4]                 # rid 0 retires early -> reuse
+    engine = ServingEngine(model, params, batch_size=2, cache_len=32)
+    rids = [engine.submit(p, n) for p, n in zip(prompts, n_new)]
+    out = engine.run()
+    assert len(out) == 4
+    for rid, prompt, n in zip(rids, prompts, n_new):
+        assert out[rid] == _sequential_generate(model, params, prompt,
+                                                n, 32)
+
+
+def test_admission_waits_for_free_slot(small):
+    """With the batch full, a new submission stays queued — step()
+    decodes the residents and only admits once one retires."""
+    cfg, model, params = small
+    prompts = _prompts(cfg, 3, (6, 8, 5))
+    engine = ServingEngine(model, params, batch_size=2, cache_len=32)
+    engine.submit(prompts[0], 4)
+    engine.submit(prompts[1], 4)
+    engine.step()                        # both admitted + 1 decode each
+    late = engine.submit(prompts[2], 2)
+    assert len(engine.queue) == 1        # batch full: queued, not admitted
+    assert engine.step() == 2            # still the two residents
+    assert len(engine.queue) == 1 and late not in engine.finished
+    out = engine.run()
+    assert out[late] == _sequential_generate(model, params, prompts[2],
+                                             2, 32)
+
+
+def test_eos_early_stop(small):
+    """Generation stops the step the eos id is produced, freeing the
+    slot before max_new_tokens is exhausted."""
+    cfg, model, params = small
+    prompt = _prompts(cfg, 1, (7,))[0]
+    free_run = _sequential_generate(model, params, prompt, 6, 32)
+    eos = free_run[2]                    # greedy decode is deterministic
+    engine = ServingEngine(model, params, batch_size=2, cache_len=32)
+    rid = engine.submit(prompt, 6, eos_id=eos)
+    out = engine.run()
+    stop = free_run.index(eos)
+    assert out[rid] == free_run[:stop + 1]
+    assert out[rid][-1] == eos and len(out[rid]) < 6
+
+
+def test_single_token_request_stops_at_prefill(small):
+    """max_new_tokens=1 must yield exactly one token (the prefill's)
+    without ever occupying a decode slot."""
+    cfg, model, params = small
+    prompt = _prompts(cfg, 1, (6,))[0]
+    engine = ServingEngine(model, params, batch_size=1, cache_len=32)
+    rid = engine.submit(prompt, 1)
+    other = engine.submit(prompt, 3)     # rides the same single slot
+    out = engine.run()
+    assert out[rid] == _sequential_generate(model, params, prompt, 1, 32)
+    assert len(out[rid]) == 1
+    assert out[other] == _sequential_generate(model, params, prompt, 3,
+                                              32)
+
+
+def test_seeded_queue_is_deterministic(small):
+    """Same seeded queue -> bit-identical outputs across fresh engines
+    (the fleet model's determinism assumption)."""
+    cfg, model, params = small
+
+    def run_once():
+        rs = np.random.RandomState(7)
+        engine = ServingEngine(model, params, batch_size=2,
+                               cache_len=32)
+        for _ in range(5):
+            engine.submit(rs.randint(0, cfg.vocab_size, 6),
+                          int(rs.randint(1, 5)))
+        return engine.run()
+
+    assert run_once() == run_once()

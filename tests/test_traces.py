@@ -12,7 +12,8 @@ import dataclasses
 import pytest
 
 from repro.serverless import (EventSweepPoint, FaultPlan, FaultRates,
-                              ServerlessSetup, Trace, lambda_default,
+                              RequestTrace, ServerlessSetup, Trace,
+                              lambda_default, request_default,
                               run_event_epoch, sweep_events)
 
 N_PARAMS = int(4.2e6)
@@ -267,3 +268,102 @@ def test_sweep_events_per_point_trace_overrides_sweep_level():
                          n_replicates=2, seed=0, processes=1)
     # point 0's own heavy trace wins over the light sweep-level default
     assert stats[0].makespan_mean_s > stats[1].makespan_mean_s + 100.0
+
+
+# ------------------------------------------------------- RequestTrace
+def _req_trace(**kw):
+    base = dict(name="r", inter_arrival_s=(0.5, 1.0, 4.0),
+                prompt_tokens=(64.0, 256.0, 1024.0),
+                decode_tokens=(8.0, 32.0, 128.0))
+    base.update(kw)
+    return RequestTrace(**base)
+
+
+def test_request_trace_sorted_and_validated():
+    tr = RequestTrace(inter_arrival_s=(4.0, 0.5, 1.0))
+    assert tr.inter_arrival_s == (0.5, 1.0, 4.0)
+    assert tr.support("inter_arrival_s") == (0.5, 4.0)
+    with pytest.raises(ValueError):
+        RequestTrace(inter_arrival_s=())
+    with pytest.raises(ValueError):                 # negative gap
+        RequestTrace(inter_arrival_s=(1.0, -0.5))
+    with pytest.raises(ValueError):                 # fractional tokens
+        _req_trace(prompt_tokens=(64.5,))
+    with pytest.raises(ValueError):                 # zero token count
+        _req_trace(decode_tokens=(0.0,))
+
+
+def test_request_trace_json_roundtrip(tmp_path):
+    tr = _req_trace()
+    path = str(tmp_path / "req.json")
+    tr.to_json(path)
+    assert RequestTrace.from_json(path) == tr
+    bad = tmp_path / "bad.json"
+    bad.write_text('{"inter_arrival_s": [1.0], "cold_start_s": [2.0]}')
+    with pytest.raises(ValueError):                 # fault-trace field
+        RequestTrace.from_json(str(bad))
+
+
+def test_request_trace_csv_load(tmp_path):
+    path = tmp_path / "req.csv"
+    path.write_text("field,value\n"
+                    "inter_arrival_s,0.5\ninter_arrival_s,2.0\n"
+                    "prompt_tokens,128\ndecode_tokens,64\n")
+    tr = RequestTrace.from_csv(str(path), name="csv")
+    assert tr.inter_arrival_s == (0.5, 2.0)
+    assert tr.prompt_tokens == (128.0,)
+    bad = tmp_path / "bad.csv"
+    bad.write_text("field,value\ncold_start_s,1.0\n")
+    with pytest.raises(ValueError):
+        RequestTrace.from_csv(str(bad))
+
+
+def test_request_trace_resampling_stays_in_support():
+    """Empirical-support containment: every resampled value is a member
+    of the sample set, whatever u (satellite property)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    tr = _req_trace()
+
+    @hyp.settings(max_examples=50, deadline=None)
+    @hyp.given(st.lists(st.floats(-0.2, 1.2, allow_nan=False),
+                        min_size=1, max_size=32))
+    def prop(us):
+        for field in ("inter_arrival_s", "prompt_tokens",
+                      "decode_tokens"):
+            vals = tr.sample(field, us)
+            assert all(v in getattr(tr, field) for v in vals)
+
+    prop()
+
+
+def test_request_trace_workload_deterministic_from_trace_and_seed():
+    """(trace, seed) -> bit-identical request plans (satellite
+    property), and the seed actually matters."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    from repro.serving.workload import Workload
+    tr = _req_trace()
+
+    @hyp.settings(max_examples=30, deadline=None)
+    @hyp.given(seed=st.integers(0, 2**31), n=st.integers(1, 64))
+    def prop(seed, n):
+        w = Workload(n_requests=n, trace=tr)
+        assert w.generate(seed) == w.generate(seed)
+
+    prop()
+    w = Workload(n_requests=32, trace=tr)
+    assert any(w.generate(s) != w.generate(s + 1) for s in range(8))
+
+
+def test_bundled_request_trace_shape():
+    tr = request_default()
+    assert tr.name == "azure-llm-2311.18677"
+    # bursty arrivals: p95 an order of magnitude above the median
+    assert tr.quantile("inter_arrival_s", 0.95) \
+        > 5 * tr.quantile("inter_arrival_s", 0.5)
+    # long-tailed token counts, integral by construction
+    assert tr.quantile("prompt_tokens", 0.95) \
+        > 3 * tr.quantile("prompt_tokens", 0.5)
+    assert all(v == int(v) for v in tr.prompt_tokens + tr.decode_tokens)
+    assert 0.1 < tr.mean_rate_rps() < 10.0

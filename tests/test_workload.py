@@ -1,0 +1,126 @@
+"""Workload/RequestPlan: eager validation, seeded determinism, prefix
+stability, and trace-rate rescaling (ISSUE 6 tentpole + satellite 4)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.serverless.traces import RequestTrace, request_default
+from repro.serving.workload import RequestPlan, Workload
+
+
+def _trace(**kw):
+    base = dict(name="r", inter_arrival_s=(0.5, 1.0, 4.0),
+                prompt_tokens=(64.0, 256.0, 1024.0),
+                decode_tokens=(8.0, 32.0, 128.0))
+    base.update(kw)
+    return RequestTrace(**base)
+
+
+# ------------------------------------------------------------ validation
+@pytest.mark.parametrize("kw", [
+    dict(n_requests=0, rate_rps=1.0),
+    dict(n_requests=-3, rate_rps=1.0),
+    dict(),                                  # no rate, no trace
+    dict(rate_rps=0.0),
+    dict(rate_rps=-2.0),
+    dict(rate_rps=float("inf")),
+    dict(rate_rps=1.0, prompt_tokens=0),
+    dict(rate_rps=1.0, decode_tokens=0),
+])
+def test_workload_rejects_bad_inputs(kw):
+    with pytest.raises(ValueError):
+        Workload(**kw)
+
+
+def test_request_plan_rejects_ragged_and_unsorted():
+    with pytest.raises(ValueError):
+        RequestPlan(arrival_s=(1.0, 2.0), prompt_tokens=(4,),
+                    decode_tokens=(2, 2))
+    with pytest.raises(ValueError):
+        RequestPlan(arrival_s=(2.0, 1.0), prompt_tokens=(4, 4),
+                    decode_tokens=(2, 2))
+
+
+# ----------------------------------------------------------- determinism
+def test_plan_is_pure_function_of_workload_and_seed():
+    w = Workload(n_requests=64, rate_rps=2.0)
+    assert w.generate(9) == w.generate(9)
+    assert w.generate(9) != w.generate(10)
+    # equal workloads (fresh objects) agree too
+    assert dataclasses.replace(w).generate(9) == w.generate(9)
+
+
+def test_plan_prefix_stable_as_n_requests_grows():
+    """Request i's draws never move when the stream is extended — the
+    fault stack's fixed-draws discipline."""
+    for kw in (dict(rate_rps=3.0),
+               dict(trace=_trace()),
+               dict(trace=_trace(), rate_rps=5.0)):
+        small = Workload(n_requests=16, **kw).generate(4)
+        big = Workload(n_requests=48, **kw).generate(4)
+        assert big.arrival_s[:16] == small.arrival_s
+        assert big.prompt_tokens[:16] == small.prompt_tokens
+        assert big.decode_tokens[:16] == small.decode_tokens
+
+
+# -------------------------------------------------------------- sampling
+def test_poisson_plan_matches_rate_and_fixed_tokens():
+    w = Workload(n_requests=4000, rate_rps=8.0, prompt_tokens=256,
+                 decode_tokens=32)
+    plan = w.generate(0)
+    gaps = np.diff((0.0,) + plan.arrival_s)
+    assert gaps.min() >= 0
+    assert np.mean(gaps) == pytest.approx(1 / 8.0, rel=0.1)
+    assert set(plan.prompt_tokens) == {256}
+    assert set(plan.decode_tokens) == {32}
+    assert plan.total_tokens == 4000 * 32
+
+
+def test_trace_plan_stays_in_empirical_support():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    tr = _trace()
+
+    @hyp.settings(max_examples=30, deadline=None)
+    @hyp.given(seed=st.integers(0, 2**31))
+    def prop(seed):
+        plan = Workload(n_requests=40, trace=tr).generate(seed)
+        gaps = np.diff((0.0,) + plan.arrival_s)
+        assert all(any(abs(g - s) < 1e-9 for s in tr.inter_arrival_s)
+                   for g in gaps)
+        assert set(plan.prompt_tokens) <= {int(v)
+                                           for v in tr.prompt_tokens}
+        assert set(plan.decode_tokens) <= {int(v)
+                                           for v in tr.decode_tokens}
+
+    prop()
+
+
+def test_with_rate_rescales_gaps_preserving_shape():
+    """Rescaled gaps hit the target mean rate but keep the trace's
+    burstiness (same gap ranking, proportional values)."""
+    tr = request_default()
+    native = Workload(n_requests=2000, trace=tr).generate(3)
+    fast = Workload(n_requests=2000, trace=tr).with_rate(10.0).generate(3)
+    g_nat = np.diff((0.0,) + native.arrival_s)
+    g_fast = np.diff((0.0,) + fast.arrival_s)
+    # same draws, scaled: exact proportionality per request
+    scale = (1.0 / 10.0) / float(np.mean(tr.inter_arrival_s))
+    assert np.allclose(g_fast, g_nat * scale)
+    assert np.mean(g_fast) == pytest.approx(0.1, rel=0.1)
+    # token streams untouched by the rate change
+    assert fast.prompt_tokens == native.prompt_tokens
+    assert fast.decode_tokens == native.decode_tokens
+
+
+def test_mean_service_tokens_and_rate_helpers():
+    w = Workload(n_requests=8, rate_rps=2.0, prompt_tokens=100,
+                 decode_tokens=10)
+    assert w.mean_rate_rps() == 2.0
+    assert w.mean_service_tokens() == (100.0, 10.0)
+    wt = Workload(n_requests=8, trace=_trace())
+    assert wt.mean_rate_rps() == pytest.approx(1 / np.mean((0.5, 1, 4)))
+    p, d = wt.mean_service_tokens()
+    assert p == pytest.approx(np.mean((64, 256, 1024)))
+    assert d == pytest.approx(np.mean((8, 32, 128)))
