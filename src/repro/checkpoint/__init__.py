@@ -1,1 +1,3 @@
-from repro.checkpoint.checkpoint import restore, save  # noqa: F401
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    dumps, loads, restore, save,
+)

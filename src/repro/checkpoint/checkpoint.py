@@ -1,4 +1,22 @@
-"""Sharding-aware msgpack checkpointing (no external deps beyond msgpack)."""
+"""Sharding-aware msgpack checkpointing (no external deps beyond msgpack).
+
+``dumps``/``loads`` expose the serialized form directly so state can
+round-trip through in-memory channels — the resilience harness's in-DB
+store (``repro.resilience.store``) partitions the same blob across
+workers that ``save`` writes to disk.  ``restore``/``loads`` place
+leaves onto the shardings of ``like``, which may live on a *different*
+mesh than the one the checkpoint was written from: survivor re-meshing
+after a worker loss (``repro.resilience``) restores a full-fleet
+snapshot onto a shrunk mesh, and ``sharding.param_pspecs`` degrades any
+no-longer-divisible dim to replication so the placement is always
+well-defined.
+
+Restored leaves are always *writable* (and therefore donatable): the
+decoder copies each record into a fresh ``bytearray`` instead of
+aliasing msgpack's read-only payload — ``np.frombuffer`` over the raw
+bytes would hand back read-only arrays that a zero-copy ``device_put``
+(or a numpy ``like`` template) silently propagates.
+"""
 from __future__ import annotations
 
 import os
@@ -10,12 +28,8 @@ import msgpack
 import numpy as np
 
 
-def _flatten(tree) -> dict:
-    leaves, treedef = jax.tree.flatten(tree)
-    return leaves, treedef
-
-
-def save(path: str, tree: Any) -> None:
+def dumps(tree: Any) -> bytes:
+    """Serialize a pytree (leaves fetched to host) to one msgpack blob."""
     leaves, treedef = jax.tree.flatten(tree)
     payload = {
         "treedef": str(treedef),
@@ -26,30 +40,62 @@ def save(path: str, tree: Any) -> None:
             for l in jax.device_get(leaves)
         ],
     }
+    return msgpack.packb(payload, use_bin_type=True)
+
+
+def save(path: str, tree: Any) -> None:
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
-        f.write(msgpack.packb(payload, use_bin_type=True))
+        f.write(dumps(tree))
     os.replace(tmp, path)
+
+
+def _decode_leaves(payload: dict) -> list:
+    """Stored records -> writable host arrays (one copy per leaf via
+    ``bytearray``; ``np.frombuffer`` over the msgpack bytes themselves
+    would be read-only and poison every downstream zero-copy path)."""
+    return [
+        np.frombuffer(bytearray(rec["data"]),
+                      dtype=rec["dtype"]).reshape(rec["shape"])
+        for rec in payload["leaves"]
+    ]
+
+
+def loads(data: bytes, like: Any) -> Any:
+    """Deserialize into the structure (and shardings) of ``like``.
+
+    ``like`` leaves may be jax arrays (restored onto their sharding),
+    ``jax.ShapeDtypeStruct``s (no allocation needed to describe the
+    target), or plain numpy arrays (decoded host arrays are returned
+    as-is — writable).  The stored treedef must match ``like``'s
+    exactly: equal leaf *counts* with different structures (e.g. a
+    renamed dict key) are an error, not a silent misassignment.
+    """
+    payload = msgpack.unpackb(data, raw=False)
+    like_leaves, treedef = jax.tree.flatten(like)
+    stored_def = payload["treedef"]
+    if stored_def != str(treedef):
+        raise ValueError(
+            f"checkpoint treedef does not match the restore template:\n"
+            f"  stored: {stored_def}\n"
+            f"  like:   {treedef}")
+    out = []
+    for arr, ref in zip(_decode_leaves(payload), like_leaves):
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(
+                f"shape mismatch {arr.shape} vs {tuple(ref.shape)}")
+        sharding = getattr(ref, "sharding", None)
+        if sharding is not None:
+            leaf = jax.device_put(arr, sharding).astype(ref.dtype)
+        elif isinstance(ref, np.ndarray):
+            leaf = arr.astype(ref.dtype, copy=False)
+        else:
+            leaf = jnp.asarray(arr).astype(ref.dtype)
+        out.append(leaf)
+    return jax.tree.unflatten(treedef, out)
 
 
 def restore(path: str, like: Any) -> Any:
     """Restore into the structure (and shardings) of ``like``."""
     with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=False)
-    like_leaves, treedef = jax.tree.flatten(like)
-    stored = payload["leaves"]
-    if len(stored) != len(like_leaves):
-        raise ValueError(
-            f"checkpoint has {len(stored)} leaves, expected "
-            f"{len(like_leaves)}")
-    out = []
-    for rec, ref in zip(stored, like_leaves):
-        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(
-            rec["shape"])
-        if tuple(arr.shape) != tuple(np.asarray(ref).shape):
-            raise ValueError(
-                f"shape mismatch {arr.shape} vs {np.asarray(ref).shape}")
-        dev = jax.device_put(arr, getattr(ref, "sharding", None)) \
-            if hasattr(ref, "sharding") else jnp.asarray(arr)
-        out.append(dev.astype(ref.dtype))
-    return jax.tree.unflatten(treedef, out)
+        return loads(f.read(), like)

@@ -101,6 +101,35 @@ def cache_pspecs(cache, mesh, *, batch_axes=("data",), model_axis="model",
     return jax.tree_util.tree_map_with_path(one, cache)
 
 
+def survivor_mesh(mesh, dead: int, *, data_axis: str = "data"):
+    """Mesh with the ``dead`` data-parallel slice removed.
+
+    The surviving devices keep their original order (so the collective
+    reduction order over survivors is stable) and every other mesh axis
+    is untouched.  Used by the resilience harness
+    (``repro.resilience``) to re-mesh the fleet after a mid-step worker
+    loss; ``param_pspecs`` evaluated on the survivor mesh degrades any
+    dim that is no longer divisible to replication, so restoring a
+    checkpoint — or adopting a dead peer's in-DB partition — onto the
+    smaller mesh is always well-defined.
+    """
+    if data_axis not in mesh.axis_names:
+        raise ValueError(f"mesh has no axis {data_axis!r}; axes are "
+                         f"{tuple(mesh.axis_names)}")
+    axis = list(mesh.axis_names).index(data_axis)
+    devs = np.asarray(mesh.devices)
+    n = devs.shape[axis]
+    if not 0 <= dead < n:
+        raise ValueError(
+            f"dead worker {dead} out of range for {data_axis}={n}")
+    if n < 2:
+        raise ValueError(
+            f"cannot remove the last {data_axis!r} shard (size {n}); "
+            "a one-worker fleet has no survivors to re-mesh")
+    keep = np.delete(devs, dead, axis=axis)
+    return jax.sharding.Mesh(keep, mesh.axis_names)
+
+
 def shardings(tree_pspecs, mesh):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_pspecs,
                         is_leaf=lambda x: isinstance(x, P))

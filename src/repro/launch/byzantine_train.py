@@ -31,9 +31,6 @@ pinned by a regression test.
 from __future__ import annotations
 
 import argparse
-import os
-import subprocess
-import sys
 from typing import Any, Dict, Optional, Tuple
 
 #: robust aggregators constructible by name with their tuning kwarg
@@ -120,25 +117,14 @@ def run_in_subprocess(inner: str, *, steps: int, attack: str = "scale",
                       seed: int = 0,
                       timeout: float = 1800.0) -> Dict[str, Any]:
     """Spawn this module with its own XLA device count; parse RESULT."""
-    import repro
-    # repro is a namespace package (__file__ is None): resolve src/ from
-    # its search path
-    src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-    out = subprocess.run(
-        [sys.executable, "-m", "repro.launch.byzantine_train",
-         "--inner", inner, "--attack", attack, "--steps", str(steps),
+    from repro.launch import _subprocess
+    stdout = _subprocess.run_module(
+        "repro.launch.byzantine_train",
+        ["--inner", inner, "--attack", attack, "--steps", str(steps),
          "--data-size", str(data_size), "--seed", str(seed)],
-        capture_output=True, text=True, timeout=timeout, env=env)
-    if out.returncode != 0:
-        raise RuntimeError(out.stderr[-3000:])
-    line = [l for l in out.stdout.splitlines()
-            if l.startswith("RESULT,")][-1]
-    fields = dict(kv.split("=", 1) for kv in line.split(",")[1:])
-    return {k: (v if k in ("inner", "attack") else float(v))
-            for k, v in fields.items()}
+        devices=devices, timeout=timeout)
+    return _subprocess.parse_result_line(
+        stdout, numeric_except=("inner", "attack"))
 
 
 def main() -> None:

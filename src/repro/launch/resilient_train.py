@@ -1,0 +1,187 @@
+"""Resilient-training driver (subprocess entry point).
+
+Runs one chaos scenario — a sharded transformer config trained
+data-parallel with a worker killed mid-step — three times in a single
+process: the uninterrupted baseline, recovery by **checkpoint restore**
+(roll back + replay) and recovery by **peer takeover** (survivors adopt
+the dead peer's in-DB partition, no replay).  One process means one
+XLA compile cache, so the three runs differ only in policy.
+
+Must run in its own process so ``--xla_force_host_platform_
+device_count`` is set before jax initializes; use
+:func:`run_in_subprocess` from the parent, or directly:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \\
+    python -m repro.launch.resilient_train --arch smollm-135m \\
+    --steps 12 --kill-step 6 --json-out /tmp/resil.json
+
+Prints one machine-readable line:
+
+  RESULT,arch=<id>,sim_arch=<id>,kill_step=<n>,bitexact=<0|1>,\\
+restore_wall_s=<f>,takeover_wall_s=<f>,restore_replayed=<n>,\\
+takeover_loss_gap=<f>
+
+and (with ``--json-out``) writes the full traces/recovery rows as JSON.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+from typing import Any, Dict, Optional
+
+
+def run_experiment(*, arch: str = "smollm-135m", sim_arch: str = "spirt",
+                   n_workers: int = 4, steps: int = 12,
+                   global_batch: int = 12, seq: int = 16,
+                   kill_step: int = 6, kill_worker: int = 1,
+                   checkpoint_every: int = 4, lr: float = 1e-2,
+                   fsdp: bool = True, restore_reinvoke: bool = True,
+                   seed: int = 0,
+                   modes: str = "baseline,restore,takeover"
+                   ) -> Dict[str, Any]:
+    """Baseline + restore + takeover for one kill scenario.
+
+    Returns a JSON-ready dict; ``bitexact`` compares the restored run's
+    full loss trace to the uninterrupted baseline (only meaningful with
+    ``restore_reinvoke=True`` — see the harness docstring)."""
+    from repro.resilience import (FaultSchedule, ResilienceConfig,
+                                  ResilientTrainer)
+    from repro.serverless.recovery import CheckpointRestore, PeerTakeover
+
+    cfg = ResilienceConfig(
+        arch=arch, sim_arch=sim_arch, n_workers=n_workers, steps=steps,
+        global_batch=global_batch, seq=seq, lr=lr,
+        checkpoint_every=checkpoint_every, fsdp=fsdp,
+        restore_reinvoke=restore_reinvoke, seed=seed)
+    trainer = ResilientTrainer(cfg)
+    schedule = FaultSchedule.single(kill_step, kill_worker)
+    want = tuple(m.strip() for m in modes.split(",") if m.strip())
+
+    out: Dict[str, Any] = {
+        "config": dataclasses.asdict(cfg),
+        "kill": {"step": kill_step, "worker": kill_worker},
+        "runs": {},
+    }
+
+    def pack(res):
+        return {
+            "losses": list(res.losses),
+            "final_loss": res.final_loss,
+            "n_params": res.n_params,
+            "state_bytes": res.state_bytes,
+            "step_s": res.step_s,
+            "n_workers_end": res.n_workers_end,
+            "replay_exact": res.replay_exact,
+            "recoveries": [dataclasses.asdict(r)
+                           for r in res.recoveries],
+        }
+
+    baseline = None
+    if "baseline" in want:
+        baseline = trainer.run()
+        out["runs"]["baseline"] = pack(baseline)
+    if "restore" in want:
+        res = trainer.run(schedule, CheckpointRestore(
+            checkpoint_every=checkpoint_every))
+        row = pack(res)
+        if baseline is not None:
+            row["bitexact_vs_baseline"] = (
+                res.losses == baseline.losses)
+        out["runs"]["restore"] = row
+    if "takeover" in want:
+        res = trainer.run(schedule, PeerTakeover())
+        row = pack(res)
+        if baseline is not None:
+            row["final_loss_gap"] = abs(
+                res.final_loss - baseline.final_loss)
+        out["runs"]["takeover"] = row
+    return out
+
+
+def run_in_subprocess(*, arch: str = "smollm-135m",
+                      sim_arch: str = "spirt", steps: int = 12,
+                      kill_step: int = 6, kill_worker: int = 1,
+                      n_workers: int = 4, global_batch: int = 12,
+                      seq: int = 16, checkpoint_every: int = 4,
+                      restore_reinvoke: bool = True, seed: int = 0,
+                      modes: str = "baseline,restore,takeover",
+                      devices: Optional[int] = None,
+                      timeout: float = 1800.0) -> Dict[str, Any]:
+    """Spawn this module with its own XLA device count; return the
+    ``--json-out`` payload."""
+    import os
+    import tempfile
+
+    from repro.launch import _subprocess
+    fd, path = tempfile.mkstemp(suffix=".json", prefix="resil_")
+    os.close(fd)
+    try:
+        argv = ["--arch", arch, "--sim-arch", sim_arch,
+                "--steps", str(steps), "--kill-step", str(kill_step),
+                "--kill-worker", str(kill_worker),
+                "--n-workers", str(n_workers),
+                "--global-batch", str(global_batch),
+                "--seq", str(seq),
+                "--checkpoint-every", str(checkpoint_every),
+                "--seed", str(seed), "--modes", modes,
+                "--json-out", path]
+        if not restore_reinvoke:
+            argv.append("--no-reinvoke")
+        _subprocess.run_module("repro.launch.resilient_train", argv,
+                               devices=devices or n_workers,
+                               timeout=timeout)
+        return _subprocess.read_json_out(path)
+    finally:
+        os.unlink(path)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="chaos-test one sharded training scenario")
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--sim-arch", default="spirt")
+    ap.add_argument("--n-workers", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--global-batch", type=int, default=12)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--kill-step", type=int, default=6)
+    ap.add_argument("--kill-worker", type=int, default=1)
+    ap.add_argument("--checkpoint-every", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--modes", default="baseline,restore,takeover")
+    ap.add_argument("--no-reinvoke", action="store_true",
+                    help="restore onto the shrunk survivor mesh instead "
+                         "of re-invoking the dead worker")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+
+    out = run_experiment(
+        arch=args.arch, sim_arch=args.sim_arch,
+        n_workers=args.n_workers, steps=args.steps,
+        global_batch=args.global_batch, seq=args.seq,
+        kill_step=args.kill_step, kill_worker=args.kill_worker,
+        checkpoint_every=args.checkpoint_every, seed=args.seed,
+        restore_reinvoke=not args.no_reinvoke, modes=args.modes)
+
+    if args.json_out:
+        with open(args.json_out, "w", encoding="utf-8") as fh:
+            json.dump(out, fh, indent=1, sort_keys=True)
+
+    runs = out["runs"]
+    rw = (runs.get("restore", {}).get("recoveries") or
+          [{}])[0].get("wall_s", float("nan"))
+    tw = (runs.get("takeover", {}).get("recoveries") or
+          [{}])[0].get("wall_s", float("nan"))
+    rr = (runs.get("restore", {}).get("recoveries") or
+          [{}])[0].get("replayed_steps", 0)
+    bx = runs.get("restore", {}).get("bitexact_vs_baseline", False)
+    gap = runs.get("takeover", {}).get("final_loss_gap", float("nan"))
+    print(f"RESULT,arch={args.arch},sim_arch={args.sim_arch},"
+          f"kill_step={args.kill_step},bitexact={int(bool(bx))},"
+          f"restore_wall_s={rw},takeover_wall_s={tw},"
+          f"restore_replayed={rr},takeover_loss_gap={gap}")
+
+
+if __name__ == "__main__":
+    main()

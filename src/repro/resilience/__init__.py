@@ -1,0 +1,21 @@
+"""Chaos harness for real sharded training.
+
+Runs the transformer configs on a host-device mesh under deterministic
+fault schedules and recovers through the *same*
+:class:`~repro.serverless.recovery.RecoveryPolicy` objects the event
+runtime scores — closing the loop between simulated time-to-recover and
+what checkpoint-restore vs peer-takeover actually cost on real state.
+"""
+from repro.resilience.harness import (RecoveryOutcome, ResilienceConfig,
+                                      ResilientTrainer, RunResult)
+from repro.resilience.schedule import FaultSchedule
+from repro.resilience.store import InMemoryStore
+
+__all__ = [
+    "FaultSchedule",
+    "InMemoryStore",
+    "RecoveryOutcome",
+    "ResilienceConfig",
+    "ResilientTrainer",
+    "RunResult",
+]

@@ -51,6 +51,19 @@ from repro.core.strategies import Strategy, _leaf_bytes
 class RecoveryPolicy:
     detection_s: float = 1.0
 
+    def real_apply(self, trainer, worker: int):
+        """Recover a *real* sharded training run (ISSUE 7).
+
+        ``trainer`` is a :class:`repro.resilience.ResilientTrainer`
+        whose worker ``worker`` was just lost mid-step.  The same policy
+        object the event runtime scores drives the real harness, so the
+        simulated and measured recovery claims share one definition.
+        Returns the trainer's :class:`~repro.resilience.harness.
+        RecoveryOutcome` (replayed steps, wall time, bytes moved).
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} has no real-training recovery hook")
+
 
 @dataclasses.dataclass(frozen=True)
 class CheckpointRestore(RecoveryPolicy):
@@ -60,11 +73,17 @@ class CheckpointRestore(RecoveryPolicy):
     def replay_rounds(self, crashed_round: int) -> int:
         return crashed_round % self.checkpoint_every
 
+    def real_apply(self, trainer, worker: int):
+        return trainer.recover_restore(worker)
+
 
 @dataclasses.dataclass(frozen=True)
 class PeerTakeover(RecoveryPolicy):
     """SPIRT-style: survivors absorb the dead worker's partition."""
     detection_s: float = 0.5
+
+    def real_apply(self, trainer, worker: int):
+        return trainer.recover_takeover(worker)
 
 
 @dataclasses.dataclass
