@@ -33,12 +33,12 @@ def main():
     workload = Workload(n_requests=10, trace=request_default())
     plan = workload.generate(seed=0)
     rs = np.random.RandomState(plan.seed)       # prompt token VALUES only
-    t0 = time.time()
+    t0 = time.time()  # repro: allow[no-wallclock] -- demo prints real elapsed time, never recorded
     for p_tok, d_tok in zip(plan.prompt_tokens, plan.decode_tokens):
         prompt = rs.randint(0, cfg.vocab_size, 4 + p_tok % 12)
         engine.submit(prompt, max_new_tokens=1 + d_tok % 6)
     out = engine.run()
-    dt = time.time() - t0
+    dt = time.time() - t0  # repro: allow[no-wallclock] -- demo prints real elapsed time, never recorded
     total = sum(len(v) for v in out.values())
     print(f"served {len(out)} requests / {total} tokens in {dt:.1f}s "
           f"with 4 slots (workload seed {plan.seed}, "

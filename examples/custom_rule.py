@@ -1,0 +1,44 @@
+"""A complete third-party repro-lint rule in ~20 lines.
+
+``hidden-seed-default`` flags constant ``seed=<literal>`` defaults in
+function signatures: a baked-in seed silently couples every caller to
+one RNG stream, while the repo's convention is that seeds flow
+explicitly from configs (see the ``seeded-rng`` contract in
+``--list-rules``).
+
+Point the CLI at it — no packaging, no entry points, just a file::
+
+    PYTHONPATH=src python -m repro.analysis \
+        --plugin examples/custom_rule.py --rules hidden-seed-default src
+"""
+import ast
+
+from repro.analysis import Finding, RuleSpec, register_rule
+
+
+def _defaulted_args(a: ast.arguments):
+    pos = a.posonlyargs + a.args
+    yield from zip(pos[len(pos) - len(a.defaults):], a.defaults)
+    yield from ((arg, d) for arg, d in zip(a.kwonlyargs, a.kw_defaults)
+                if d is not None)
+
+
+def check_hidden_seed_default(ctx):
+    for mod in ctx.modules.values():
+        for fi in mod.functions:
+            for arg, default in _defaulted_args(fi.node.args):
+                if arg.arg == "seed" and isinstance(default, ast.Constant) \
+                        and default.value is not None:
+                    yield Finding(
+                        mod.rel, fi.node.lineno, "hidden-seed-default",
+                        f"{fi.name}() bakes in seed={default.value!r}; "
+                        "require the caller to pass one")
+
+
+register_rule(RuleSpec(
+    rule_id="hidden-seed-default",
+    description="no constant seed= defaults in function signatures",
+    contract="seeds flow from configs/SeedSequence sub-streams so "
+             "replicates stay disjoint; a baked-in default couples "
+             "every caller to one stream",
+    check=check_hidden_seed_default))

@@ -43,7 +43,7 @@ def main():
                               loss_fn=loss_fn)
         state = ts.init_state(jax.random.PRNGKey(0))
         rs = np.random.RandomState(0)
-        t0 = time.time()
+        t0 = time.time()  # repro: allow[no-wallclock] -- progress print of real training time
         print(f"\n--- {sname} ---")
         for step in range(args.steps):
             idx = rs.randint(0, len(imgs), args.batch)
@@ -60,7 +60,7 @@ def main():
                                 if k not in ("loss", "step"))
                 print(f"step {step + 1:4d} loss {float(metrics['loss']):.3f}"
                       f" test_acc {acc:.3f}{extra}"
-                      f" ({time.time() - t0:.0f}s)")
+                      f" ({time.time() - t0:.0f}s)")  # repro: allow[no-wallclock] -- progress print of real training time
 
 
 if __name__ == "__main__":

@@ -1,0 +1,48 @@
+"""repro-lint: a determinism & trace-safety static analyzer enforcing
+the repo's own correctness contracts.
+
+Every claim this reproduction makes — golden-snapshot parity for the
+five paper archs, bit-reproducible ``BENCH_*.json`` sweeps, PR 7's
+bit-exact checkpoint-restore replay — rests on invariants that were
+only enforced by runtime tests, after a violation had already shipped.
+This package machine-checks them on every tree:
+
+  seeded-rng            disjoint seeded streams or nothing
+  no-wallclock          host clock only in launch/ and benchmarks/
+  frozen-spec-mutation  registry-resolved specs are immutable
+  trace-safety          no host syncs on jit/shard_map paths
+  kernel-ref-parity     every public kernel has an oracle + test
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis src tests benchmarks examples
+
+Per-line suppressions carry a mandatory reason::
+
+    t0 = time.perf_counter()  # repro: allow[no-wallclock] -- measures real XLA walls
+
+Third-party rules register through the same frozen-registry pattern as
+``repro.serverless.archs`` (see ``examples/custom_rule.py``)::
+
+    from repro.analysis import RuleSpec, register_rule
+    register_rule(RuleSpec(rule_id="my-rule", description=..., check=fn))
+
+The engine is stdlib-only; nothing here imports numpy or jax.
+"""
+from repro.analysis.engine import (AnalysisContext, AnalysisResult,
+                                   Finding, FunctionInfo, ModuleInfo,
+                                   analyze_modules, analyze_paths,
+                                   analyze_sources)
+from repro.analysis.registry import (RuleSpec, get_rule, list_rules,
+                                     register_rule, unregister_rule)
+
+# importing the built-in rules registers them (same eager-registration
+# idiom as the paper archs in repro.serverless.archs)
+from repro.analysis import rules as _rules          # noqa: F401
+
+__all__ = [
+    "AnalysisContext", "AnalysisResult", "Finding", "FunctionInfo",
+    "ModuleInfo", "RuleSpec", "analyze_modules", "analyze_paths",
+    "analyze_sources", "get_rule", "list_rules", "register_rule",
+    "unregister_rule",
+]

@@ -1,0 +1,8 @@
+import sys
+
+from repro.analysis.cli import main
+
+try:
+    sys.exit(main())
+except BrokenPipeError:      # report piped into head/less and truncated
+    sys.exit(0)

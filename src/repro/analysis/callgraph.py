@@ -1,0 +1,225 @@
+"""Lightweight intra-repo call graph rooted at jit/shard_map entry
+points.
+
+Purpose-built for the ``trace-safety`` and ``kernel-ref-parity``
+rules, not a general points-to analysis.  Nodes are function
+definitions keyed ``(module_rel, dotted_name_in_module)``; edges are
+added for
+
+  * direct calls — local names, imported names, ``module.attr`` chains
+    resolved through each module's import map;
+  * ``self.method()`` — preferring the enclosing class, falling back to
+    duck dispatch;
+  * duck dispatch — ``obj.method()`` on an unresolvable receiver links
+    to every class method of that name in the scanned tree (a CHA-style
+    over-approximation: for a *safety* rule, reaching too much beats
+    reaching too little);
+  * function references passed as arguments (``jax.lax.scan(step, …)``,
+    ``defvjp(fwd, bwd)``, ``functools.partial(f, …)``) — how trace-side
+    bodies usually enter jax.
+
+Roots are functions passed to (or decorated with) ``jax.jit`` /
+``pjit`` / any ``*.shard_map`` — the boundary past which host syncs,
+``np.asarray`` materialisation, and Python branching on traced values
+stop being slow and start being wrong.
+"""
+from __future__ import annotations
+
+import ast
+from collections import deque
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.engine import FunctionInfo, ModuleInfo
+
+Key = Tuple[str, str]                       # (module rel path, func name)
+
+_JIT_QUALS = frozenset({"jax.jit", "jax.pjit",
+                        "jax.experimental.pjit.pjit"})
+_PARTIAL_QUALS = frozenset({"functools.partial", "partial"})
+
+# duck dispatch gives up on method names defined in more places than
+# this — linking e.g. every `.get` in the tree would drown the graph
+_MAX_DUCK_TARGETS = 12
+
+
+def _is_jit_qual(qual: Optional[str]) -> bool:
+    if not qual:
+        return False
+    return qual in _JIT_QUALS or qual.rsplit(".", 1)[-1] == "shard_map"
+
+
+class CallGraph:
+    def __init__(self, modules: Dict[str, ModuleInfo]):
+        self.modules = modules
+        # indexes
+        self._defs: Dict[Key, FunctionInfo] = {}
+        self._by_module: Dict[str, Dict[str, Key]] = {}     # top-level fns
+        self._by_dotted: Dict[str, str] = {}                # dotted -> rel
+        self._methods: Dict[str, List[Key]] = {}            # duck index
+        for rel, mod in modules.items():
+            if mod.tree is None:
+                continue
+            self._by_dotted[mod.dotted_name] = rel
+            local: Dict[str, Key] = {}
+            for fi in mod.functions:
+                key = (rel, fi.name)
+                self._defs[key] = fi
+                if "." not in fi.name:
+                    local[fi.name] = key
+                if fi.cls is not None:
+                    self._methods.setdefault(fi.basename, []).append(key)
+            self._by_module[rel] = local
+        self.edges: Dict[Key, Set[Key]] = {}
+        self.roots: Set[Key] = set()
+        self._parent: Dict[Key, Key] = {}       # BFS provenance
+        for rel, mod in modules.items():
+            if mod.tree is not None:
+                self._scan_module(rel, mod)
+        self._reachable = self._bfs()
+
+    # -- resolution --------------------------------------------------------
+    def _module_func(self, dotted: str) -> Optional[Key]:
+        """Resolve ``pkg.module.func`` (longest module prefix wins)."""
+        if "." not in dotted:
+            return None
+        mod_path, func = dotted.rsplit(".", 1)
+        rel = self._by_dotted.get(mod_path)
+        if rel is None:
+            return None
+        return self._by_module.get(rel, {}).get(func)
+
+    def _resolve_ref(self, mod: ModuleInfo, encl: Optional[FunctionInfo],
+                     node) -> List[Key]:
+        """Function-definition keys a Name/Attribute may refer to."""
+        rel = mod.rel
+        if isinstance(node, ast.Name):
+            # nested def of the enclosing function chain
+            if encl is not None:
+                key = (rel, f"{encl.name}.{node.id}")
+                if key in self._defs:
+                    return [key]
+            key = self._by_module.get(rel, {}).get(node.id)
+            if key is not None:
+                return [key]
+            dotted = mod.name_map.get(node.id)
+            if dotted:
+                hit = self._module_func(dotted)
+                if hit is not None:
+                    return [hit]
+            return []
+        if isinstance(node, ast.Attribute):
+            dotted = mod.resolve(node)
+            if dotted:
+                hit = self._module_func(dotted)
+                if hit is not None:
+                    return [hit]
+                # ClassName.method in this module
+                key = (rel, dotted)
+                if key in self._defs:
+                    return [key]
+            # self.method() → own class first
+            if (isinstance(node.value, ast.Name)
+                    and node.value.id == "self" and encl is not None
+                    and encl.cls is not None):
+                own = (rel, f"{encl.name.rsplit('.', 1)[0]}.{node.attr}")
+                if own in self._defs:
+                    return [own]
+            ducks = self._methods.get(node.attr, [])
+            if 0 < len(ducks) <= _MAX_DUCK_TARGETS:
+                return list(ducks)
+        return []
+
+    # -- construction ------------------------------------------------------
+    def _add_edge(self, src: Optional[Key], dst: Key):
+        if src is None or src == dst:
+            return
+        self.edges.setdefault(src, set()).add(dst)
+
+    def _add_root(self, keys: List[Key]):
+        self.roots.update(keys)
+
+    def _scan_module(self, rel: str, mod: ModuleInfo):
+        # decorator roots: @jax.jit / @partial(jax.jit, …)
+        for fi in mod.functions:
+            for dec in fi.node.decorator_list:
+                qual = mod.resolve(dec)
+                target = dec.func if isinstance(dec, ast.Call) else None
+                if target is not None:
+                    tq = mod.resolve(target)
+                    if tq in _PARTIAL_QUALS and dec.args:
+                        qual = mod.resolve(dec.args[0])
+                    elif _is_jit_qual(tq):
+                        qual = tq
+                if _is_jit_qual(qual):
+                    self.roots.add((rel, fi.name))
+        for call, qual in mod.walk_calls():
+            encl = mod.enclosing_function(call)
+            src = (rel, encl.name) if encl is not None else None
+            # jit/shard_map call sites: first argument is an entry point
+            if _is_jit_qual(qual) and call.args:
+                self._add_root(self._targets(mod, encl, call.args[0]))
+            # custom_vjp wiring: fn.defvjp(fwd, bwd) puts fwd/bwd on the
+            # trace path of fn
+            if (isinstance(call.func, ast.Attribute)
+                    and call.func.attr == "defvjp"):
+                owners = self._resolve_ref(mod, encl, call.func.value)
+                for owner in owners:
+                    for arg in call.args:
+                        for t in self._resolve_ref(mod, encl, arg):
+                            self._add_edge(owner, t)
+            # direct call edge
+            for t in self._resolve_ref(mod, encl, call.func):
+                self._add_edge(src, t)
+            # function references passed as arguments
+            for arg in list(call.args) + [kw.value for kw in call.keywords]:
+                if isinstance(arg, (ast.Name, ast.Attribute)):
+                    for t in self._resolve_ref(mod, encl, arg):
+                        self._add_edge(src, t)
+
+    def _targets(self, mod, encl, node) -> List[Key]:
+        """Entry-point targets of a jit/shard_map argument, looking
+        through functools.partial."""
+        if isinstance(node, ast.Call):
+            q = mod.resolve(node.func)
+            if q in _PARTIAL_QUALS and node.args:
+                return self._targets(mod, encl, node.args[0])
+            return []
+        return self._resolve_ref(mod, encl, node)
+
+    # -- reachability ------------------------------------------------------
+    def _bfs(self) -> Set[Key]:
+        seen = set(self.roots)
+        q = deque(sorted(self.roots))
+        while q:
+            cur = q.popleft()
+            for nxt in sorted(self.edges.get(cur, ())):
+                if nxt not in seen:
+                    seen.add(nxt)
+                    self._parent[nxt] = cur
+                    q.append(nxt)
+        return seen
+
+    def closure(self, start: Key) -> Set[Key]:
+        """Everything callable from ``start`` (start included)."""
+        seen = {start}
+        q = deque([start])
+        while q:
+            for nxt in self.edges.get(q.popleft(), ()):
+                if nxt not in seen:
+                    seen.add(nxt)
+                    q.append(nxt)
+        return seen
+
+    def is_reachable(self, key: Key) -> bool:
+        return key in self._reachable
+
+    def reachable_functions(self):
+        """(rel, FunctionInfo, root_key) for every function on a trace
+        path, in deterministic order."""
+        for key in sorted(self._reachable):
+            yield key[0], self._defs[key], self.root_of(key)
+
+    def root_of(self, key: Key) -> Key:
+        while key in self._parent:
+            key = self._parent[key]
+        return key

@@ -1,0 +1,80 @@
+"""``python -m repro.analysis`` — the repo's own lint gate.
+
+Exit codes are stable so CI can gate on them:
+
+  0  clean (possibly with reasoned suppressions)
+  1  at least one non-suppressed finding
+  2  usage error (argparse)
+
+``--plugin`` executes a Python file before the run; anything it
+registers through :func:`repro.analysis.register_rule` participates
+exactly like the built-ins (see ``examples/custom_rule.py``).
+"""
+from __future__ import annotations
+
+import argparse
+import runpy
+import sys
+from typing import Optional, Sequence
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks", "examples")
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro-lint: determinism & trace-safety static "
+                    "analyzer enforcing this repo's correctness "
+                    "contracts")
+    p.add_argument("paths", nargs="*", default=None,
+                   help="files/directories to scan (default: "
+                        + " ".join(DEFAULT_PATHS) + ", where present)")
+    p.add_argument("--root", default=".",
+                   help="directory findings are reported relative to "
+                        "(rule path scopes follow it; default: cwd)")
+    p.add_argument("--format", choices=("human", "json"),
+                   default="human", help="report format")
+    p.add_argument("--rules", default=None,
+                   help="comma-separated rule ids to run "
+                        "(default: all registered)")
+    p.add_argument("--plugin", action="append", default=[],
+                   metavar="FILE.py",
+                   help="execute FILE before the run so third-party "
+                        "rules can register_rule() themselves "
+                        "(repeatable)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print registered rules and their contracts, "
+                        "then exit 0")
+    return p
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    # import inside main so --plugin files resolve repro.analysis from
+    # an already-initialised registry (built-ins registered first)
+    from repro.analysis import engine, report
+
+    args = build_parser().parse_args(argv)
+    for plugin in args.plugin:
+        runpy.run_path(plugin)
+    if args.list_rules:
+        print(report.render_rules())
+        return 0
+    import os
+    paths = args.paths or [p for p in DEFAULT_PATHS
+                           if os.path.isdir(os.path.join(args.root, p))]
+    rules = None
+    if args.rules is not None:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+    try:
+        result = engine.analyze_paths(paths, root=args.root, rules=rules)
+    except ValueError as e:              # unknown rule id → usage error
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    render = report.render_json if args.format == "json" \
+        else report.render_human
+    print(render(result))
+    return result.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

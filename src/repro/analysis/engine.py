@@ -1,0 +1,336 @@
+"""AST lint engine: parse → suppressions → rules → ordered findings.
+
+The engine is deliberately boring and deliberately **pure**: findings
+are a function of file contents alone.  No wall-clock, no RNG, no
+filesystem state beyond the scanned sources, stable ordering — the
+same bit-reproducibility contract the sweeps hold for ``BENCH_*.json``
+applies to lint reports (``tests/test_analysis.py`` pins it with a
+hypothesis property).  Everything is stdlib-only so the CI lint job
+runs before any dependency install.
+
+Suppression syntax (reason mandatory — an unexplained exemption is a
+contract erosion nobody reviews)::
+
+    something_flagged()  # repro: allow[rule-id] -- why this is safe
+    other()              # repro: allow[rule-a, rule-b] -- shared reason
+
+A suppression missing its reason (or its rule list) is itself reported
+as ``bad-suppression`` and cannot be suppressed.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from functools import cached_property
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis import registry
+from repro.analysis.registry import BAD_SUPPRESSION, SYNTAX_ERROR
+
+# directories never walked into: caches, VCS state, and the
+# deliberately-violating lint fixture corpus (scanned only when a test
+# roots the engine *inside* it)
+SKIP_DIRS = frozenset({"__pycache__", ".git", ".hypothesis",
+                       "analysis_fixtures", ".pytest_cache"})
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro:\s*allow\[([^\]]*)\]\s*(?:--\s*(.*\S))?\s*$")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation at one source line (ordering = report order)."""
+    path: str          # posix path relative to the analysis root
+    line: int          # 1-based
+    rule_id: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule_id}] {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class FunctionInfo:
+    """One function/method definition inside a module."""
+    name: str                     # dotted within the module: Cls.meth, f.g
+    node: ast.AST                 # the FunctionDef / AsyncFunctionDef
+    cls: Optional[str] = None     # immediately enclosing class name
+
+    @property
+    def basename(self) -> str:
+        return self.name.rsplit(".", 1)[-1]
+
+
+class ModuleInfo:
+    """One parsed source file plus everything rules keep re-deriving:
+    import resolution, function index, per-line suppressions."""
+
+    def __init__(self, rel: str, source: str):
+        self.rel = rel.replace(os.sep, "/")
+        self.parts: Tuple[str, ...] = tuple(self.rel.split("/"))
+        self.source = source
+        self.lines = source.splitlines()
+        self.suppressions: Dict[int, Tuple[str, ...]] = {}
+        self.bad_suppressions: List[int] = []
+        self.syntax_error: Optional[int] = None
+        self.functions: Tuple[FunctionInfo, ...] = ()
+        self.name_map: Dict[str, str] = {}
+        self._enclosing: Dict[int, Optional[FunctionInfo]] = {}
+        self._parse_suppressions()
+        try:
+            self.tree: Optional[ast.Module] = ast.parse(source)
+        except SyntaxError as e:
+            self.tree = None
+            self.syntax_error = e.lineno or 1
+            return
+        self.name_map = _build_name_map(self.tree, self.dotted_package)
+        self.functions = tuple(self._index_functions())
+
+    # -- path helpers -----------------------------------------------------
+    @property
+    def basename(self) -> str:
+        return self.parts[-1]
+
+    @property
+    def dotted_name(self) -> str:
+        """Importable dotted module path (``src/`` is a sys.path root)."""
+        parts = self.parts[1:] if self.parts[0] == "src" else self.parts
+        parts = list(parts)
+        parts[-1] = parts[-1][:-3] if parts[-1].endswith(".py") \
+            else parts[-1]
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        return ".".join(parts)
+
+    @property
+    def dotted_package(self) -> str:
+        return self.dotted_name.rsplit(".", 1)[0] \
+            if "." in self.dotted_name else ""
+
+    def in_dir(self, name: str) -> bool:
+        """True when ``name`` is one of this file's parent directories."""
+        return name in self.parts[:-1]
+
+    # -- suppressions -----------------------------------------------------
+    def _parse_suppressions(self):
+        for lineno, text in enumerate(self.lines, 1):
+            m = _SUPPRESS_RE.search(text)
+            if m is None:
+                # half-written suppression markers are themselves
+                # findings (the marker split keeps this line from
+                # matching its own heuristic)
+                if ("repro:" + " allow") in text and "#" in text:
+                    self.bad_suppressions.append(lineno)
+                continue
+            ids = tuple(s.strip() for s in m.group(1).split(",")
+                        if s.strip())
+            reason = (m.group(2) or "").strip()
+            if not ids or not reason:
+                self.bad_suppressions.append(lineno)
+            else:
+                self.suppressions[lineno] = ids
+
+    def suppresses(self, finding: Finding) -> bool:
+        ids = self.suppressions.get(finding.line, ())
+        return finding.rule_id in ids or "*" in ids
+
+    # -- AST indexes ------------------------------------------------------
+    def _index_functions(self):
+        funcs: List[FunctionInfo] = []
+
+        def visit(node, qual, cls, cur):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    q = f"{qual}.{child.name}" if qual else child.name
+                    fi = FunctionInfo(q, child, cls)
+                    funcs.append(fi)
+                    self._enclosing[id(child)] = cur
+                    visit(child, q, None, fi)
+                elif isinstance(child, ast.ClassDef):
+                    q = f"{qual}.{child.name}" if qual else child.name
+                    self._enclosing[id(child)] = cur
+                    visit(child, q, child.name, cur)
+                else:
+                    self._enclosing[id(child)] = cur
+                    visit(child, qual, cls, cur)
+
+        visit(self.tree, "", None, None)
+        return funcs
+
+    def enclosing_function(self, node) -> Optional[FunctionInfo]:
+        """Innermost function containing ``node`` (None = module level)."""
+        return self._enclosing.get(id(node))
+
+    def resolve(self, node) -> Optional[str]:
+        """Best-effort dotted qualname for a Name/Attribute chain, with
+        imports resolved (``np.random.rand`` → ``numpy.random.rand``)."""
+        if isinstance(node, ast.Name):
+            return self.name_map.get(node.id, node.id)
+        if isinstance(node, ast.Attribute):
+            base = self.resolve(node.value)
+            return f"{base}.{node.attr}" if base else None
+        return None
+
+    def walk_calls(self):
+        """Every ``ast.Call`` with its resolved callee qualname."""
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                yield node, self.resolve(node.func)
+
+
+def _build_name_map(tree: ast.Module, package: str) -> Dict[str, str]:
+    """local name → dotted origin, merged over every import statement in
+    the file (function-level lazy imports included — a lint heuristic,
+    not a scope-exact resolver)."""
+    nm: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.asname:
+                    nm[a.asname] = a.name
+                else:
+                    root = a.name.split(".", 1)[0]
+                    nm[root] = root
+        elif isinstance(node, ast.ImportFrom):
+            base = node.module or ""
+            if node.level:                       # relative import
+                pkg_parts = package.split(".") if package else []
+                up = node.level - 1
+                pkg_parts = pkg_parts[:len(pkg_parts) - up] if up else \
+                    pkg_parts
+                base = ".".join(pkg_parts + ([base] if base else []))
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                nm[a.asname or a.name] = f"{base}.{a.name}" if base \
+                    else a.name
+    return nm
+
+
+def is_pure_literal(node) -> bool:
+    """True when an expression contains no Name/Attribute/Call — i.e. a
+    constant the author baked in rather than a value that flows."""
+    return not any(isinstance(n, (ast.Name, ast.Attribute, ast.Call))
+                   for n in ast.walk(node))
+
+
+# ---------------------------------------------------------------------------
+# Context + runner
+# ---------------------------------------------------------------------------
+class AnalysisContext:
+    """Everything a rule can see: the parsed modules (sorted by path,
+    so iteration order never depends on filesystem enumeration) and the
+    lazily-built intra-repo call graph."""
+
+    def __init__(self, modules: Dict[str, ModuleInfo]):
+        self.modules: Dict[str, ModuleInfo] = dict(
+            sorted(modules.items()))
+
+    @cached_property
+    def callgraph(self):
+        from repro.analysis.callgraph import CallGraph
+        return CallGraph(self.modules)
+
+    def test_modules(self) -> List[ModuleInfo]:
+        return [m for m in self.modules.values()
+                if m.basename.startswith("test_")]
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalysisResult:
+    """One engine run: active findings, what was suppressed, coverage."""
+    findings: Tuple[Finding, ...]
+    suppressed: Tuple[Finding, ...]
+    n_files: int
+    rule_ids: Tuple[str, ...]
+
+    @property
+    def exit_code(self) -> int:
+        return 1 if self.findings else 0
+
+
+def iter_python_files(paths: Sequence[str], root: str) -> List[str]:
+    """Resolve CLI path arguments to a sorted list of .py files.  A
+    directory passed explicitly is walked even if its *name* is in
+    SKIP_DIRS (that is how the fixture corpus gets scanned on purpose);
+    nested skip-dirs are always pruned."""
+    out = []
+    for p in paths:
+        full = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(full):
+            if full.endswith(".py"):
+                out.append(full)
+            continue
+        for dirpath, dirnames, filenames in os.walk(full):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in SKIP_DIRS)
+            for f in sorted(filenames):
+                if f.endswith(".py"):
+                    out.append(os.path.join(dirpath, f))
+    return sorted(set(out))
+
+
+def _resolve_rules(rules) -> List[registry.RuleSpec]:
+    if rules is None:
+        return [registry.get_rule(r) for r in registry.list_rules()]
+    return [r if isinstance(r, registry.RuleSpec)
+            else registry.get_rule(r) for r in rules]
+
+
+def analyze_modules(modules: Dict[str, ModuleInfo],
+                    rules=None) -> AnalysisResult:
+    """Run ``rules`` (default: every registered rule) over already-
+    parsed modules; the deterministic core shared by the file and
+    in-memory entry points."""
+    specs = _resolve_rules(rules)
+    ctx = AnalysisContext(modules)
+    active: List[Finding] = []
+    suppressed: List[Finding] = []
+    for mod in ctx.modules.values():
+        if mod.syntax_error is not None:
+            active.append(Finding(mod.rel, mod.syntax_error, SYNTAX_ERROR,
+                                  "file does not parse; nothing on it "
+                                  "can be checked"))
+        for line in mod.bad_suppressions:
+            active.append(Finding(
+                mod.rel, line, BAD_SUPPRESSION,
+                "suppression needs a rule list and a reason: "
+                "# repro: allow[rule-id] -- <why this is safe>"))
+    checkable = {rel: m for rel, m in ctx.modules.items()
+                 if m.tree is not None}
+    ctx_checkable = AnalysisContext(checkable)
+    for spec in specs:
+        for f in spec.check(ctx_checkable):
+            mod = ctx.modules.get(f.path)
+            if mod is not None and mod.suppresses(f):
+                suppressed.append(f)
+            else:
+                active.append(f)
+    return AnalysisResult(findings=tuple(sorted(active)),
+                          suppressed=tuple(sorted(suppressed)),
+                          n_files=len(ctx.modules),
+                          rule_ids=tuple(s.rule_id for s in specs))
+
+
+def analyze_sources(sources: Dict[str, str], rules=None) -> AnalysisResult:
+    """Analyze in-memory ``{relative/path.py: source}`` mappings —
+    the pure-function entry point tests and examples drive."""
+    return analyze_modules(
+        {rel: ModuleInfo(rel, text) for rel, text in sources.items()},
+        rules=rules)
+
+
+def analyze_paths(paths: Sequence[str], root: str = ".",
+                  rules=None) -> AnalysisResult:
+    """Analyze files/directories on disk, reporting paths relative to
+    ``root``."""
+    root = os.path.abspath(root)
+    modules = {}
+    for f in iter_python_files(paths, root):
+        rel = os.path.relpath(f, root).replace(os.sep, "/")
+        with open(f, encoding="utf-8") as fh:
+            modules[rel] = ModuleInfo(rel, fh.read())
+    return analyze_modules(modules, rules=rules)

@@ -1,0 +1,89 @@
+"""Frozen rule registry: one :class:`RuleSpec` per lint rule.
+
+Mirrors ``repro.serverless.archs`` — the registry IS the extension
+surface.  A third-party rule is one frozen spec registered through
+:func:`register_rule` (see ``examples/custom_rule.py``); the CLI picks
+it up via ``--plugin``, with the same actionable unknown-name /
+duplicate-name errors as ``get_arch``/``register_arch``.
+
+A rule's ``check`` receives the whole
+:class:`~repro.analysis.engine.AnalysisContext` (every parsed module
+plus the lazy call graph) and yields
+:class:`~repro.analysis.engine.Finding`s — per-file rules iterate
+``ctx.modules``; cross-file rules (``kernel-ref-parity``) correlate
+across them.  Suppression filtering, ordering, and reporting are the
+engine's job, so checks stay pure AST walks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Dict, Tuple
+
+_RULE_ID_RE = re.compile(r"^[a-z][a-z0-9]*(-[a-z0-9]+)*$")
+
+# engine-owned pseudo-rule ids (never registered, never suppressible):
+# a suppression without a reason, and a file that does not parse
+BAD_SUPPRESSION = "bad-suppression"
+SYNTAX_ERROR = "syntax-error"
+_RESERVED = (BAD_SUPPRESSION, SYNTAX_ERROR)
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleSpec:
+    """Everything the engine needs to know about one lint rule.
+
+    ``check(ctx)`` yields findings; ``contract`` names the repo
+    invariant the rule machine-checks (it surfaces in ``--list-rules``
+    and the JSON payload so a finding always points back at *why*).
+    """
+    rule_id: str
+    description: str
+    check: Callable
+    contract: str = ""
+
+    def __post_init__(self):
+        if not _RULE_ID_RE.match(self.rule_id):
+            raise ValueError(
+                f"rule id {self.rule_id!r} must be kebab-case "
+                "([a-z0-9] words joined by '-')")
+        if self.rule_id in _RESERVED:
+            raise ValueError(
+                f"rule id {self.rule_id!r} is reserved by the engine")
+        if not callable(self.check):
+            raise ValueError(f"rule {self.rule_id!r}: check must be "
+                             "callable")
+
+
+_REGISTRY: Dict[str, RuleSpec] = {}
+
+
+def register_rule(spec: RuleSpec, *, overwrite: bool = False) -> RuleSpec:
+    """Add ``spec`` to the registry (returns it, so modules can keep a
+    handle).  Re-registering an id is an error unless ``overwrite`` —
+    a silently replaced rule is a silently weakened contract."""
+    if not overwrite and spec.rule_id in _REGISTRY:
+        raise ValueError(f"rule {spec.rule_id!r} is already registered "
+                         "(pass overwrite=True to replace)")
+    _REGISTRY[spec.rule_id] = spec
+    return spec
+
+
+def unregister_rule(rule_id: str) -> None:
+    """Remove a rule (tests / examples cleaning up after themselves)."""
+    _REGISTRY.pop(rule_id, None)
+
+
+def get_rule(rule_id: str) -> RuleSpec:
+    try:
+        return _REGISTRY[rule_id]
+    except KeyError:
+        raise ValueError(
+            f"unknown rule {rule_id!r}; registered: "
+            f"{', '.join(_REGISTRY)}") from None
+
+
+def list_rules() -> Tuple[str, ...]:
+    """All registered rule ids, in registration order (the repo's
+    built-in contracts first)."""
+    return tuple(_REGISTRY)

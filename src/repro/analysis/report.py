@@ -1,0 +1,57 @@
+"""Human and JSON reporters.
+
+Both are pure functions of an :class:`AnalysisResult` — no timestamps,
+no environment, no ordering dependence — so the same tree always
+produces byte-identical reports (the property
+``tests/test_analysis.py`` pins; it is the lint-level twin of the
+BENCH content-hash rule).
+"""
+from __future__ import annotations
+
+import json
+
+from repro.analysis import registry
+from repro.analysis.engine import AnalysisResult
+
+
+def render_human(result: AnalysisResult) -> str:
+    out = [f.render() for f in result.findings]
+    n_paths = len({f.path for f in result.findings})
+    out.append(
+        f"{len(result.findings)} finding"
+        f"{'' if len(result.findings) == 1 else 's'} in {n_paths} file"
+        f"{'' if n_paths == 1 else 's'} "
+        f"({result.n_files} scanned, {len(result.suppressed)} "
+        f"suppressed)")
+    return "\n".join(out)
+
+
+def render_json(result: AnalysisResult) -> str:
+    def row(f):
+        return {"path": f.path, "line": f.line, "rule": f.rule_id,
+                "message": f.message}
+
+    payload = {
+        "version": 1,
+        "rules": [
+            {"id": r, "description": registry.get_rule(r).description,
+             "contract": registry.get_rule(r).contract}
+            for r in result.rule_ids if r in registry.list_rules()
+        ],
+        "n_files": result.n_files,
+        "findings": [row(f) for f in result.findings],
+        "suppressed": [row(f) for f in result.suppressed],
+    }
+    return json.dumps(payload, indent=2, sort_keys=True)
+
+
+def render_rules() -> str:
+    """--list-rules: every registered rule with the contract it
+    guards."""
+    out = []
+    for rid in registry.list_rules():
+        spec = registry.get_rule(rid)
+        out.append(f"{rid}\n    {spec.description}")
+        if spec.contract:
+            out.append(f"    contract: {spec.contract}")
+    return "\n".join(out)

@@ -1,0 +1,435 @@
+"""The built-in rules: each encodes a contract this repo already
+relies on (golden snapshots, bit-reproducible BENCH sweeps, PR 7's
+bit-exact replay) but until now only enforced *after* a violation ran.
+
+Importing this module registers all five; ``repro.analysis.__init__``
+does so eagerly, mirroring how ``repro.serverless.archs`` registers the
+paper architectures at import.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from repro.analysis.engine import (AnalysisContext, Finding,
+                                   is_pure_literal)
+from repro.analysis.registry import RuleSpec, register_rule
+
+# ---------------------------------------------------------------------------
+# seeded-rng — disjoint seeded streams or nothing
+# ---------------------------------------------------------------------------
+# directories whose results feed golden snapshots / BENCH payloads:
+# every random draw must be replayable from (config, seed)
+_STRICT_RNG_DIRS = frozenset({"serverless", "serving", "resilience",
+                              "data"})
+_RNG_CTORS = frozenset({"numpy.random.RandomState",
+                        "numpy.random.default_rng", "random.Random"})
+
+
+def _seed_arg(call: ast.Call):
+    if call.args:
+        return call.args[0]
+    for kw in call.keywords:
+        if kw.arg == "seed":
+            return kw.value
+    return None
+
+
+def check_seeded_rng(ctx: AnalysisContext) -> Iterable[Finding]:
+    for mod in ctx.modules.values():
+        strict = any(p in _STRICT_RNG_DIRS for p in mod.parts[:-1])
+        for call, qual in mod.walk_calls():
+            if not qual:
+                continue
+            at_module_level = mod.enclosing_function(call) is None
+            tail = qual.rsplit(".", 1)[-1]
+            # global-stream draws: np.random.rand / random.random / …
+            is_np_global = (qual.startswith("numpy.random.")
+                            and qual.count(".") == 2
+                            and tail[:1].islower()
+                            and tail != "default_rng")
+            is_std_global = (qual.startswith("random.")
+                             and qual.count(".") == 1
+                             and tail[:1].islower())
+            if (is_np_global or is_std_global) and (strict
+                                                    or at_module_level):
+                where = "at module level" if at_module_level else \
+                    "in a determinism-critical package"
+                yield Finding(
+                    mod.rel, call.lineno, "seeded-rng",
+                    f"{qual} draws from the process-global RNG stream "
+                    f"{where}; draw from a Generator seeded through "
+                    "SeedSequence sub-streams instead")
+                continue
+            if qual in _RNG_CTORS:
+                seed = _seed_arg(call)
+                if seed is None or (isinstance(seed, ast.Constant)
+                                    and seed.value is None):
+                    yield Finding(
+                        mod.rel, call.lineno, "seeded-rng",
+                        f"{qual}() without a seed is entropy from the "
+                        "OS; every stream must be replayable from "
+                        "(config, seed)")
+                elif strict and is_pure_literal(seed):
+                    yield Finding(
+                        mod.rel, call.lineno, "seeded-rng",
+                        f"{qual} with a hard-coded seed in a "
+                        "determinism-critical package; seeds must flow "
+                        "from function arguments or SeedSequence "
+                        "sub-streams so replicates stay disjoint")
+
+
+register_rule(RuleSpec(
+    rule_id="seeded-rng",
+    description="no global/unseeded RNG streams; seeds flow from "
+                "arguments or SeedSequence sub-streams",
+    contract="sweep_events / FaultPlan / Workload results are pure "
+             "functions of (config, seed) with disjoint per-class "
+             "sub-streams (PR 3); a global or unseeded draw silently "
+             "couples replicates",
+    check=check_seeded_rng))
+
+
+# ---------------------------------------------------------------------------
+# no-wallclock — simulated reports never absorb host time
+# ---------------------------------------------------------------------------
+_WALLCLOCK_QUALS = frozenset({
+    "time.time", "time.time_ns", "time.perf_counter",
+    "time.perf_counter_ns", "time.monotonic", "time.monotonic_ns",
+    "time.process_time", "time.process_time_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.date.today",
+})
+# measurement code lives here; everything else is simulation/reporting
+_WALLCLOCK_OK_DIRS = ("launch", "benchmarks")
+
+
+def check_no_wallclock(ctx: AnalysisContext) -> Iterable[Finding]:
+    for mod in ctx.modules.values():
+        if any(mod.in_dir(d) or mod.parts[0] == d
+               for d in _WALLCLOCK_OK_DIRS):
+            continue
+        for call, qual in mod.walk_calls():
+            if qual in _WALLCLOCK_QUALS:
+                yield Finding(
+                    mod.rel, call.lineno, "no-wallclock",
+                    f"{qual}() outside launch/ and benchmarks/; "
+                    "simulated timings must come from the cost model, "
+                    "never the host clock")
+
+
+register_rule(RuleSpec(
+    rule_id="no-wallclock",
+    description="wall-clock reads only in launch/ and benchmarks/",
+    contract="BENCH_*.json payloads are content-hashed minus timings "
+             "and golden snapshots are bit-exact; a host-clock read in "
+             "a report-producing path makes both unreproducible",
+    check=check_no_wallclock))
+
+
+# ---------------------------------------------------------------------------
+# frozen-spec-mutation — registry-resolved specs are immutable
+# ---------------------------------------------------------------------------
+_SPEC_GETTERS = frozenset({"get_arch", "get_attack"})
+_SPEC_TYPES = frozenset({"ArchSpec", "AttackSpec"})
+
+
+def _is_spec_getter(mod, node) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    qual = mod.resolve(node.func)
+    return bool(qual) and qual.rsplit(".", 1)[-1] in _SPEC_GETTERS
+
+
+def _scopes(mod):
+    """(name, body, owner) per lexical scope; owner is the FunctionInfo
+    (None = module level) so walks can stay disjoint per scope."""
+    yield "<module>", mod.tree, None
+    for fi in mod.functions:
+        yield fi.name, fi.node, fi
+
+
+def _scope_nodes(mod, body, owner):
+    """Nodes lexically owned by this scope — nested function bodies
+    belong to *their* scope, keeping every node single-checked."""
+    for node in ast.walk(body):
+        if mod.enclosing_function(node) is owner:
+            yield node
+
+
+def _tainted_names(mod, body_node, owner):
+    """Names bound to registry-resolved specs within one scope."""
+    names = set()
+    if owner is not None:
+        args = body_node.args
+        for a in (args.posonlyargs + args.args + args.kwonlyargs):
+            ann = a.annotation
+            if ann is not None:
+                q = mod.resolve(ann) or ""
+                if q.rsplit(".", 1)[-1] in _SPEC_TYPES:
+                    names.add(a.arg)
+    for node in _scope_nodes(mod, body_node, owner):
+        if isinstance(node, ast.Assign) and _is_spec_getter(mod,
+                                                            node.value):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None \
+                and _is_spec_getter(mod, node.value):
+            if isinstance(node.target, ast.Name):
+                names.add(node.target.id)
+    return names
+
+
+def check_frozen_spec_mutation(ctx: AnalysisContext) -> Iterable[Finding]:
+    for mod in ctx.modules.values():
+        if mod.parts[0] == "tests":
+            # tests legitimately build modified spec COPIES via
+            # dataclasses.replace to exercise registration paths
+            continue
+        for call, qual in mod.walk_calls():
+            if qual == "object.__setattr__":
+                encl = mod.enclosing_function(call)
+                if encl is None or encl.basename != "__post_init__":
+                    yield Finding(
+                        mod.rel, call.lineno, "frozen-spec-mutation",
+                        "object.__setattr__ outside __post_init__ "
+                        "defeats dataclass freezing; build a new object "
+                        "instead")
+        for scope_name, node, owner in _scopes(mod):
+            tainted = _tainted_names(mod, node, owner)
+            for sub in _scope_nodes(mod, node, owner):
+                if isinstance(sub, (ast.Assign, ast.AugAssign)):
+                    targets = sub.targets if isinstance(sub, ast.Assign) \
+                        else [sub.target]
+                    for t in targets:
+                        if isinstance(t, ast.Attribute) and (
+                                (isinstance(t.value, ast.Name)
+                                 and t.value.id in tainted)
+                                or _is_spec_getter(mod, t.value)):
+                            yield Finding(
+                                mod.rel, sub.lineno,
+                                "frozen-spec-mutation",
+                                "attribute assignment on a registry-"
+                                "resolved spec; specs are frozen — "
+                                "register a new spec instead")
+                elif isinstance(sub, ast.Call):
+                    q = mod.resolve(sub.func) or ""
+                    if q in ("dataclasses.replace", "replace") \
+                            and sub.args:
+                        a0 = sub.args[0]
+                        if ((isinstance(a0, ast.Name)
+                             and a0.id in tainted)
+                                or _is_spec_getter(mod, a0)):
+                            yield Finding(
+                                mod.rel, sub.lineno,
+                                "frozen-spec-mutation",
+                                "dataclasses.replace on a registry-"
+                                "resolved spec inside src/; derived "
+                                "variants must be registered under "
+                                "their own name, not shadow a paper "
+                                "spec")
+
+
+register_rule(RuleSpec(
+    rule_id="frozen-spec-mutation",
+    description="registry-resolved ArchSpec/AttackSpec values are "
+                "never mutated or replace()d in src/",
+    contract="tests/golden/ pins the five paper archs bit-exactly and "
+             "PR 4's extension rule says new behaviour registers a new "
+             "spec; mutating a resolved spec changes every downstream "
+             "consumer silently",
+    check=check_frozen_spec_mutation))
+
+
+# ---------------------------------------------------------------------------
+# trace-safety — no host syncs on jit/shard_map paths
+# ---------------------------------------------------------------------------
+_NP_MATERIALIZE = frozenset({"numpy.asarray", "numpy.array", "numpy.copy",
+                             "numpy.ascontiguousarray"})
+_PY_CASTS = frozenset({"float", "int", "bool"})
+_TRACED_TEST_METHODS = frozenset({"any", "all", "item"})
+
+
+def _own_nodes(mod, fi):
+    """Nodes belonging to ``fi`` itself (nested defs excluded — they
+    are their own graph nodes)."""
+    for node in ast.walk(fi.node):
+        if mod.enclosing_function(node) is fi:
+            yield node
+
+
+def _contains_jax_call(mod, node) -> bool:
+    """A subtree that *calls into jax* yields a fresh traced array —
+    casting or branching on it is unambiguously a host sync.  Bare
+    names/attributes are skipped: ``int(cfg.factor * k * T / E)`` on
+    static shapes is normal jit code."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            q = mod.resolve(sub.func) or ""
+            if q.startswith("jax."):
+                return True
+    return False
+
+
+def _branches_on_traced(mod, test) -> bool:
+    for node in ast.walk(test):
+        if isinstance(node, ast.Call):
+            q = mod.resolve(node.func) or ""
+            if q.startswith("jax.numpy.") or q.startswith("jax.lax."):
+                return True
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _TRACED_TEST_METHODS
+                    and not q.startswith("numpy.")):
+                return True
+    return False
+
+
+def check_trace_safety(ctx: AnalysisContext) -> Iterable[Finding]:
+    cg = ctx.callgraph
+    for rel, fi, root in cg.reachable_functions():
+        mod = ctx.modules[rel]
+        via = f"(reachable from jitted entry {root[1]!r} in {root[0]})"
+        for node in _own_nodes(mod, fi):
+            if isinstance(node, ast.Call):
+                qual = mod.resolve(node.func)
+                if (isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "item" and not node.args):
+                    yield Finding(
+                        mod.rel, node.lineno, "trace-safety",
+                        f".item() forces a host sync {via}")
+                elif qual in _NP_MATERIALIZE:
+                    yield Finding(
+                        mod.rel, node.lineno, "trace-safety",
+                        f"{qual} materialises a traced value on host "
+                        f"{via}; use jnp instead")
+                elif (qual in _PY_CASTS and len(node.args) == 1
+                      and not node.keywords
+                      and _contains_jax_call(mod, node.args[0])):
+                    yield Finding(
+                        mod.rel, node.lineno, "trace-safety",
+                        f"{qual}() on a runtime value is a host sync "
+                        f"under tracing {via}")
+            elif isinstance(node, (ast.If, ast.While)) \
+                    and _branches_on_traced(mod, node.test):
+                yield Finding(
+                    mod.rel, node.lineno, "trace-safety",
+                    f"Python branch on a traced array {via}; use "
+                    "jnp.where / lax.cond")
+
+
+register_rule(RuleSpec(
+    rule_id="trace-safety",
+    description="no host syncs, numpy materialisation, or Python "
+                "branches on traced values in functions reachable "
+                "from jit/shard_map entry points",
+    contract="train/serve/kernel step functions stay jittable and "
+             "donate-safe; a host sync inside the traced region either "
+             "crashes at trace time or silently bakes one traced value "
+             "into every future call",
+    check=check_trace_safety))
+
+
+# ---------------------------------------------------------------------------
+# kernel-ref-parity — every public kernel has an oracle and a test
+# ---------------------------------------------------------------------------
+def _twin(name: str, ref_names) -> Optional[str]:
+    if name in ref_names:
+        return name
+    for r in sorted(ref_names):
+        if name.startswith(r + "_") or r.startswith(name + "_"):
+            return r
+    return None
+
+
+def _referenced_names(ctx, test_mod, dir_prefix: str, only_ref: bool):
+    """Names in ``test_mod`` that resolve into kernels modules under
+    ``dir_prefix`` (into ref.py when ``only_ref``)."""
+    out = set()
+    cg = ctx.callgraph
+    for node in ast.walk(test_mod.tree):
+        if not isinstance(node, (ast.Attribute, ast.Name)):
+            continue
+        dotted = test_mod.resolve(node)
+        if not dotted or "." not in dotted:
+            continue
+        mod_path, name = dotted.rsplit(".", 1)
+        rel = cg._by_dotted.get(mod_path)
+        if rel is None or not rel.startswith(dir_prefix):
+            continue
+        is_ref = rel.rsplit("/", 1)[-1] == "ref.py"
+        if is_ref == only_ref:
+            out.add((rel, name))
+    return out
+
+
+def check_kernel_ref_parity(ctx: AnalysisContext) -> Iterable[Finding]:
+    cg = ctx.callgraph
+    # group kernels modules by their kernels/ directory
+    groups = {}
+    for rel, mod in ctx.modules.items():
+        if "kernels" in mod.parts[:-1]:
+            prefix = rel[:rel.index("kernels") + len("kernels")] + "/"
+            groups.setdefault(prefix, []).append(mod)
+    test_mods = ctx.test_modules()
+    for prefix, mods in sorted(groups.items()):
+        ref_mod = next((m for m in mods if m.basename == "ref.py"), None)
+        kernel_mods = [m for m in mods
+                       if m.basename not in ("ref.py", "__init__.py")]
+        public = []
+        for m in kernel_mods:
+            for fi in m.functions:
+                if "." not in fi.name and not fi.name.startswith("_"):
+                    public.append((m, fi))
+        if ref_mod is None:
+            for m, fi in public:
+                yield Finding(
+                    m.rel, fi.node.lineno, "kernel-ref-parity",
+                    f"public kernel {fi.name!r} has no oracle: "
+                    f"{prefix}ref.py does not exist")
+            continue
+        ref_names = {fi.name for fi in ref_mod.functions
+                     if "." not in fi.name
+                     and not fi.name.startswith("_")}
+        # what each test module touches, computed once per group
+        refs_per_test = [(t, _referenced_names(ctx, t, prefix, False),
+                          _referenced_names(ctx, t, prefix, True))
+                         for t in test_mods]
+        for m, fi in public:
+            twin = _twin(fi.name, ref_names)
+            if twin is None:
+                yield Finding(
+                    m.rel, fi.node.lineno, "kernel-ref-parity",
+                    f"public kernel {fi.name!r} has no reference twin "
+                    f"in {prefix}ref.py (pure-jnp oracle required for "
+                    "parity testing)")
+                continue
+            if not test_mods:
+                continue            # src-only run: no tests scanned
+            key = (m.rel, fi.name)
+            covered = False
+            for t, kernel_refs, ref_refs in refs_per_test:
+                if not any(name == twin for _, name in ref_refs):
+                    continue
+                for k_rel, k_name in kernel_refs:
+                    k_key = (k_rel, k_name)
+                    if k_key == key or key in cg.closure(k_key):
+                        covered = True
+                        break
+                if covered:
+                    break
+            if not covered:
+                yield Finding(
+                    m.rel, fi.node.lineno, "kernel-ref-parity",
+                    f"no parity test references both kernel "
+                    f"{fi.name!r} and its oracle ref.{twin}")
+
+
+register_rule(RuleSpec(
+    rule_id="kernel-ref-parity",
+    description="every public kernel in kernels/ has a pure-jnp twin "
+                "in kernels/ref.py and a test referencing both",
+    contract="Pallas kernels are only trusted through their oracles "
+             "(kernels/ref.py + tests/test_kernels.py); an untwinned "
+             "kernel is an unverifiable fast path",
+    check=check_kernel_ref_parity))

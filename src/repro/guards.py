@@ -1,0 +1,49 @@
+"""Cheap runtime backstops for the contracts ``repro.analysis`` checks
+statically.
+
+The report dataclasses (``serving.FleetReport``,
+``serverless.RuntimeReport``) are the boundary where simulated numbers
+become *claims* — golden snapshots, BENCH_*.json hashes, Pareto fronts.
+A jax tracer leaking into one of those fields means a jitted function
+is building reports mid-trace, which silently turns a pure host-side
+measurement into an abstract value (and usually a ConcretizationError
+three calls later, far from the cause).  ``no_tracer_fields`` is the
+runtime twin of the static ``trace-safety`` rule: O(fields) type
+checks, no jax import, so analytic-only users never pay accelerator
+import costs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+def _is_tracer(value) -> bool:
+    t = type(value)
+    if t.__module__.partition(".")[0] != "jax":     # fast path: host types
+        return False
+    return any(c.__name__ == "Tracer" for c in t.__mro__)
+
+
+def _scan(value, depth: int = 2):
+    """Yield tracer-typed values in ``value`` (containers one level of
+    tuple/list/dict deep per ``depth`` — report fields are flat or
+    shallowly nested)."""
+    if _is_tracer(value):
+        yield value
+    elif depth and isinstance(value, (tuple, list)):
+        for v in value:
+            yield from _scan(v, depth - 1)
+    elif depth and isinstance(value, dict):
+        for v in value.values():
+            yield from _scan(v, depth - 1)
+
+
+def no_tracer_fields(obj) -> None:
+    """Raise ``TypeError`` if any dataclass field of ``obj`` holds a jax
+    tracer (directly or inside a shallow tuple/list/dict)."""
+    for f in dataclasses.fields(obj):
+        for bad in _scan(getattr(obj, f.name)):
+            raise TypeError(
+                f"{type(obj).__name__}.{f.name} holds a jax tracer "
+                f"({type(bad).__name__}); reports must be built from "
+                "concrete host values, never inside a traced function")

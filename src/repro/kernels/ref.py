@@ -37,6 +37,22 @@ def masked_filter(blocks, mask):
     return kept, bf - kept
 
 
+def block_significance(blocks, threshold):
+    """MLLess significance mask: blocks whose RMS exceeds ``threshold``
+    times the fleet-wide RMS (oracle for ``ops.block_significance``)."""
+    sq = block_norms(blocks)
+    rms = jnp.sqrt(jnp.mean(sq) + 1e-20)
+    return jnp.sqrt(sq) > threshold * rms
+
+
+def significance_filter(blocks, threshold):
+    """(kept, residual, mask) in one pass (oracle for
+    ``ops.significance_filter``)."""
+    mask = block_significance(blocks, threshold)
+    kept, resid = masked_filter(blocks, mask)
+    return kept, resid, mask
+
+
 def wkv6(r, k, v, logw, u):
     """Exact step-by-step RWKV6 recurrence (the kernel oracle).
 

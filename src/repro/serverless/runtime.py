@@ -64,6 +64,7 @@ import math
 from heapq import heappop, heappush
 from typing import Dict, List, Optional, Tuple
 
+from repro.guards import no_tracer_fields
 from repro.serverless.archs import get_arch
 from repro.serverless.faults import FaultPlan
 from repro.serverless.recovery import (CheckpointRestore, PeerTakeover,
@@ -162,6 +163,12 @@ class RuntimeReport:
     masked_updates: int                # byzantine contributions masked
     scale_events: List[Tuple[float, int]]   # (time, delta)
     timeline: List[Tuple[float, int, str]]  # (time, worker, event)
+
+    def __post_init__(self):
+        # runtime backstop for the static trace-safety rule: a report
+        # built inside a traced function would freeze abstract values
+        # into golden snapshots / BENCH payloads
+        no_tracer_fields(self)
 
     @property
     def time_to_recover_s(self) -> float:

@@ -48,6 +48,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.guards import no_tracer_fields
 from repro.serverless.archs import get_arch
 from repro.serverless.autoscale import ReactiveAutoscaler
 from repro.serverless.traces import Trace
@@ -104,6 +105,12 @@ class FleetReport:
     scale_decisions: Tuple[Tuple[int, int, str], ...] = ()
     latencies_s: Tuple[float, ...] = dataclasses.field(
         default=(), repr=False)
+
+    def __post_init__(self):
+        # runtime backstop for the static trace-safety rule: a report
+        # built inside a traced function would freeze abstract values
+        # into BENCH payloads
+        no_tracer_fields(self)
 
 
 @dataclasses.dataclass(frozen=True)

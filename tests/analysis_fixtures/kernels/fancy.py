@@ -1,0 +1,17 @@
+"""Fixture kernels: one covered, one orphan, one twin-but-untested."""
+
+
+def fused_scale(x, s):
+    return x * s
+
+
+def orphan_norm(x):
+    return (x * x).sum()
+
+
+def half_covered(x):
+    return x + 1
+
+
+def _private_helper(x):
+    return x

@@ -1,0 +1,9 @@
+"""Fixture oracles for fancy.py (orphan_norm deliberately missing)."""
+
+
+def fused_scale(x, s):
+    return x * s
+
+
+def half_covered(x):
+    return x + 1

@@ -1,0 +1,20 @@
+"""Fixture: every way seeded-rng fires (serverless/ is a strict dir)."""
+import random
+
+import numpy as np
+
+JITTER = np.random.uniform()        # global stream at module level
+
+rng = np.random.default_rng()       # unseeded ctor: OS entropy
+
+
+def sample_noise():
+    return random.random()          # global stream in a strict dir
+
+
+def make_stream():
+    return np.random.RandomState(1234)   # hard-coded seed in a strict dir
+
+
+def seeded_ok(seed):
+    return np.random.default_rng(seed)   # clean: the seed flows in

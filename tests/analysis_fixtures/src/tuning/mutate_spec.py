@@ -1,0 +1,19 @@
+"""Fixture: every way frozen-spec-mutation fires inside src/."""
+import dataclasses
+
+from repro.serverless.archs import ArchSpec, get_arch
+
+
+def rescale(factor):
+    spec = get_arch("scatter_reduce")
+    spec.cost_per_gb = factor            # attr assign on a resolved spec
+    return spec
+
+
+def fork():
+    return dataclasses.replace(get_arch("allreduce"), n_workers=64)
+
+
+def tweak(spec: ArchSpec):
+    object.__setattr__(spec, "name", "hacked")   # outside __post_init__
+    spec.n_workers = 2                   # annotated-param taint

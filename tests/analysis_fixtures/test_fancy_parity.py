@@ -1,0 +1,6 @@
+"""Fixture parity test: covers fused_scale, not half_covered."""
+from kernels import fancy, ref
+
+
+def test_fused_scale_parity():
+    assert fancy.fused_scale(2.0, 3.0) == ref.fused_scale(2.0, 3.0)

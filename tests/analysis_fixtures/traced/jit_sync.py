@@ -1,0 +1,17 @@
+"""Fixture: host syncs in a helper reachable from a jitted entry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _leaky_norm(x):
+    total = float(jnp.sum(x))       # Python cast of a fresh traced value
+    if jnp.any(x > 0):              # Python branch on a traced array
+        x = x / total
+    host = np.asarray(x)            # numpy materialisation
+    return host.item()              # explicit host sync
+
+
+@jax.jit
+def step(x):
+    return _leaky_norm(x * 2.0)

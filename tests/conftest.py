@@ -4,6 +4,10 @@ import jax
 import numpy as np
 import pytest
 
+# the repro-lint fixture corpus is deliberately-violating source, not
+# importable test code
+collect_ignore = ["analysis_fixtures"]
+
 
 @pytest.fixture(scope="session")
 def rng():

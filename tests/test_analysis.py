@@ -1,0 +1,348 @@
+"""repro-lint: fixture-corpus pins (exact rule_id + line per rule),
+engine determinism/suppression properties, registry contracts, CLI
+exit codes, plugin loading, and the tracer-field runtime backstop."""
+import dataclasses
+import functools
+import json
+import os
+import runpy
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+try:                                   # property tests ride along when
+    import hypothesis.strategies as st  # hypothesis is available; the
+    from hypothesis import given, settings  # deterministic twins below
+    HAVE_HYPOTHESIS = True             # always run
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.analysis import (Finding, RuleSpec, analyze_paths,
+                            analyze_sources, registry)
+from repro.analysis.report import render_json
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = Path(__file__).parent / "analysis_fixtures"
+
+# the pinned contract: every built-in rule fires on its fixture at
+# exactly these (path, line, rule_id) triples — nothing more, nothing
+# less.  A rule edit that shifts any of these is a behaviour change.
+EXPECTED = frozenset({
+    ("kernels/fancy.py", 8, "kernel-ref-parity"),
+    ("kernels/fancy.py", 12, "kernel-ref-parity"),
+    ("reporting/wallclock.py", 7, "no-wallclock"),
+    ("reporting/wallclock.py", 8, "no-wallclock"),
+    ("serverless/global_rng.py", 6, "seeded-rng"),
+    ("serverless/global_rng.py", 8, "seeded-rng"),
+    ("serverless/global_rng.py", 12, "seeded-rng"),
+    ("serverless/global_rng.py", 16, "seeded-rng"),
+    ("src/tuning/mutate_spec.py", 9, "frozen-spec-mutation"),
+    ("src/tuning/mutate_spec.py", 14, "frozen-spec-mutation"),
+    ("src/tuning/mutate_spec.py", 18, "frozen-spec-mutation"),
+    ("src/tuning/mutate_spec.py", 19, "frozen-spec-mutation"),
+    ("traced/jit_sync.py", 8, "trace-safety"),
+    ("traced/jit_sync.py", 9, "trace-safety"),
+    ("traced/jit_sync.py", 11, "trace-safety"),
+    ("traced/jit_sync.py", 12, "trace-safety"),
+})
+EXPECTED_LIST = sorted(EXPECTED)
+BUILTIN_RULES = ("seeded-rng", "no-wallclock", "frozen-spec-mutation",
+                 "trace-safety", "kernel-ref-parity")
+
+
+@functools.lru_cache(maxsize=1)
+def _sources():
+    return {p.relative_to(FIXTURES).as_posix(): p.read_text()
+            for p in sorted(FIXTURES.rglob("*.py"))}
+
+
+@functools.lru_cache(maxsize=1)
+def _result():
+    return analyze_sources(_sources())
+
+
+# ---------------------------------------------------------------------------
+# fixture corpus: each rule fires exactly where pinned
+# ---------------------------------------------------------------------------
+def test_every_rule_fires_at_pinned_lines():
+    got = {(f.path, f.line, f.rule_id) for f in _result().findings}
+    assert got == EXPECTED
+
+
+@pytest.mark.parametrize("rule_id", BUILTIN_RULES)
+def test_each_rule_represented(rule_id):
+    assert any(r == rule_id for _, _, r in EXPECTED)
+    only = analyze_sources(_sources(), rules=[rule_id])
+    got = {(f.path, f.line, f.rule_id) for f in only.findings}
+    assert got == {t for t in EXPECTED if t[2] == rule_id}
+
+
+def test_fixture_run_from_disk_matches_in_memory():
+    disk = analyze_paths(["."], root=str(FIXTURES))
+    assert disk.findings == _result().findings
+    assert disk.suppressed == _result().suppressed
+
+
+def test_reasoned_suppression_is_honoured():
+    sup = {(f.path, f.line, f.rule_id) for f in _result().suppressed}
+    assert sup == {("reporting/wallclock.py", 13, "no-wallclock")}
+    assert _result().exit_code == 1
+
+
+def test_trace_safety_names_the_jitted_entry():
+    msgs = [f.message for f in _result().findings
+            if f.rule_id == "trace-safety"]
+    assert msgs and all(
+        "reachable from jitted entry 'step'" in m for m in msgs)
+
+
+# ---------------------------------------------------------------------------
+# engine properties: suppression totality + purity.  Deterministic
+# versions always run; hypothesis widens the input space when present.
+# ---------------------------------------------------------------------------
+def _check_suppression_moves_finding(idx, reason):
+    """Appending a reasoned allow[] to any violating line moves that
+    finding (and only that finding) to the suppressed list."""
+    path, line, rule_id = EXPECTED_LIST[idx]
+    sources = dict(_sources())
+    lines = sources[path].splitlines()
+    lines[line - 1] += f"  {_ALLOW}[{rule_id}] -- {reason}"
+    sources[path] = "\n".join(lines) + "\n"
+    res = analyze_sources(sources)
+    got = {(f.path, f.line, f.rule_id) for f in res.findings}
+    assert (path, line, rule_id) not in got
+    assert got == EXPECTED - {(path, line, rule_id)}
+    assert (path, line, rule_id) in {
+        (f.path, f.line, f.rule_id) for f in res.suppressed}
+
+
+def _check_order_independence(order):
+    """Same contents in any insertion order → byte-identical report
+    (the lint-level twin of the BENCH content-hash rule)."""
+    src = _sources()
+    res = analyze_sources({k: src[k] for k in order})
+    assert res.findings == _result().findings
+    assert render_json(res) == render_json(_result())
+
+
+@pytest.mark.parametrize("idx", range(len(EXPECTED_LIST)))
+def test_suppressed_lines_never_report(idx):
+    _check_suppression_moves_finding(idx, "pinned fixture reason")
+
+
+def test_findings_pure_function_of_contents():
+    _check_order_independence(sorted(_sources(), reverse=True))
+
+
+if HAVE_HYPOTHESIS:
+    @given(idx=st.integers(0, len(EXPECTED_LIST) - 1),
+           reason=st.text(
+               st.characters(min_codepoint=33, max_codepoint=126),
+               min_size=1, max_size=16))
+    @settings(max_examples=30, deadline=None)
+    def test_suppressed_lines_never_report_fuzz(idx, reason):
+        _check_suppression_moves_finding(idx, reason)
+
+    @given(order=st.permutations(sorted(_sources())))
+    @settings(max_examples=20, deadline=None)
+    def test_findings_pure_function_of_contents_fuzz(order):
+        _check_order_independence(order)
+
+
+def test_json_report_has_no_environment():
+    payload = json.loads(render_json(_result()))
+    assert set(payload) == {"version", "rules", "n_files", "findings",
+                            "suppressed"}
+    assert payload["version"] == 1
+    assert [r["id"] for r in payload["rules"]] == list(BUILTIN_RULES)
+    assert all(r["contract"] for r in payload["rules"])
+
+
+# ---------------------------------------------------------------------------
+# engine-owned findings: bad suppressions and unparseable files
+# ---------------------------------------------------------------------------
+# built by concatenation so this test file's own lines never look like
+# suppression markers to the line-based parser
+_ALLOW = "# repro" + ": allow"
+
+
+def test_suppression_without_reason_is_a_finding():
+    res = analyze_sources(
+        {"a.py": f"import time\nx = 1  {_ALLOW}[no-wallclock]\n"})
+    assert [(f.line, f.rule_id) for f in res.findings] == \
+        [(2, "bad-suppression")]
+
+
+def test_suppression_without_rules_is_a_finding():
+    res = analyze_sources({"a.py": f"x = 1  {_ALLOW}[] -- because\n"})
+    assert [(f.line, f.rule_id) for f in res.findings] == \
+        [(1, "bad-suppression")]
+
+
+def test_bad_suppression_cannot_be_registered_or_suppressed():
+    with pytest.raises(ValueError, match="reserved"):
+        RuleSpec(rule_id="bad-suppression", description="x",
+                 check=lambda ctx: [])
+
+
+def test_syntax_error_is_a_finding():
+    res = analyze_sources({"broken.py": "def (:\n"})
+    assert [(f.path, f.rule_id) for f in res.findings] == \
+        [("broken.py", "syntax-error")]
+    assert res.exit_code == 1
+
+
+# ---------------------------------------------------------------------------
+# registry contracts (mirrors serverless.archs semantics)
+# ---------------------------------------------------------------------------
+def test_builtin_rules_registered_in_order():
+    assert registry.list_rules()[:5] == BUILTIN_RULES
+
+
+def test_duplicate_registration_is_an_error():
+    spec = RuleSpec(rule_id="seeded-rng", description="imposter",
+                    check=lambda ctx: [])
+    with pytest.raises(ValueError, match="already registered"):
+        registry.register_rule(spec)
+
+
+def test_unknown_rule_error_names_registered():
+    with pytest.raises(ValueError, match="unknown rule .*seeded-rng"):
+        registry.get_rule("no-such-rule")
+
+
+def test_rule_id_must_be_kebab_case():
+    for bad in ("CamelCase", "snake_case", "-leading", "trailing-", ""):
+        with pytest.raises(ValueError, match="kebab-case"):
+            RuleSpec(rule_id=bad, description="x", check=lambda ctx: [])
+
+
+def test_rulespec_is_frozen():
+    spec = registry.get_rule("seeded-rng")
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.rule_id = "other"
+
+
+# ---------------------------------------------------------------------------
+# third-party rules: examples/custom_rule.py
+# ---------------------------------------------------------------------------
+def test_custom_rule_registers_and_fires():
+    registry.unregister_rule("hidden-seed-default")
+    runpy.run_path(str(REPO / "examples" / "custom_rule.py"))
+    try:
+        res = analyze_sources(
+            {"m.py": "def gen(seed=0):\n    return seed\n"},
+            rules=["hidden-seed-default"])
+        assert [(f.rule_id, f.line) for f in res.findings] == \
+            [("hidden-seed-default", 1)]
+        clean = analyze_sources(
+            {"m.py": "def gen(seed):\n    return seed\n"},
+            rules=["hidden-seed-default"])
+        assert not clean.findings
+    finally:
+        registry.unregister_rule("hidden-seed-default")
+
+
+# ---------------------------------------------------------------------------
+# CLI: stable exit codes, json mode, plugins
+# ---------------------------------------------------------------------------
+def _cli(*args, cwd=REPO):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, cwd=cwd, env=env)
+
+
+def test_cli_fixture_corpus_exits_1():
+    p = _cli(".", "--root", str(FIXTURES))
+    assert p.returncode == 1, p.stderr
+    assert "[seeded-rng]" in p.stdout
+
+
+def test_cli_self_run_is_clean_json():
+    p = _cli("src", "tests", "benchmarks", "examples", "--format", "json")
+    assert p.returncode == 0, p.stdout + p.stderr
+    payload = json.loads(p.stdout)
+    assert payload["findings"] == []
+    # every suppression in the tree carries a reasoned allow[]
+    assert payload["suppressed"], "expected reasoned suppressions"
+
+
+def test_cli_list_rules():
+    p = _cli("--list-rules")
+    assert p.returncode == 0
+    for rid in BUILTIN_RULES:
+        assert rid in p.stdout
+
+
+def test_cli_plugin_pickup(tmp_path):
+    (tmp_path / "mod.py").write_text("def gen(seed=42):\n    return 1\n")
+    p = _cli("--plugin", "examples/custom_rule.py",
+             "--rules", "hidden-seed-default",
+             ".", "--root", str(tmp_path))
+    assert p.returncode == 1, p.stdout + p.stderr
+    assert "hidden-seed-default" in p.stdout
+    assert "seed=42" in p.stdout
+
+
+def test_cli_unknown_rule_fails_loudly():
+    p = _cli("--rules", "nope", ".", "--root", str(FIXTURES))
+    assert p.returncode not in (0, 1)
+
+
+# ---------------------------------------------------------------------------
+# runtime backstop: report dataclasses reject tracer fields
+# ---------------------------------------------------------------------------
+def _fleet_report(**over):
+    from repro.serving.fleet import FleetReport
+    kw = dict(arch="cpu_serverless", n_requests=1, makespan_s=1.0,
+              latency_p50_s=0.1, latency_p95_s=0.2, latency_p99_s=0.3,
+              ttft_p50_s=0.05, ttft_p95_s=0.06, mean_latency_s=0.1,
+              throughput_rps=1.0, tokens_generated=10, total_cost=0.01,
+              usd_per_1k_requests=1.0, peak_replicas=1,
+              replica_seconds=1.0, n_cold_starts=0)
+    kw.update(over)
+    return FleetReport(**kw)
+
+
+def _runtime_report(**over):
+    from repro.serverless.runtime import RuntimeReport
+    kw = dict(arch="allreduce", makespan_s=1.0, analytic_s=1.0, rounds=1,
+              work_done_batches=1.0, n_workers_start=1, n_workers_peak=1,
+              n_workers_end=1, total_cost=0.1, stage_totals={},
+              recoveries=[], poisoned_updates=0, masked_updates=0,
+              scale_events=[], timeline=[])
+    kw.update(over)
+    return RuntimeReport(**kw)
+
+
+def test_reports_accept_concrete_values():
+    assert _fleet_report().makespan_s == 1.0
+    assert _runtime_report().time_to_recover_s == 0.0
+
+
+def test_fleet_report_rejects_tracer_field():
+    import jax
+    import jax.numpy as jnp
+
+    def build(x):
+        _fleet_report(makespan_s=x)
+        return x
+
+    with pytest.raises(TypeError, match="tracer"):
+        jax.jit(build)(jnp.float32(1.0))
+
+
+def test_runtime_report_rejects_tracer_in_container():
+    import jax
+    import jax.numpy as jnp
+
+    def build(x):
+        _runtime_report(stage_totals={"compute": x})
+        return x
+
+    with pytest.raises(TypeError, match="tracer"):
+        jax.jit(build)(jnp.float32(1.0))

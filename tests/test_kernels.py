@@ -64,6 +64,27 @@ def test_block_norms_vs_ref(n, b, dtype):
                                rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5)
 
 
+@pytest.mark.parametrize("n,b", [(100, 128), (513, 64)])
+@pytest.mark.parametrize("threshold", [0.5, 1.0, 2.0])
+def test_block_significance_vs_ref(n, b, threshold):
+    x = jnp.asarray(RS.randn(n, b), jnp.float32)
+    got = ops.block_significance(x, threshold)
+    want = ref.block_significance(x, threshold)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n,b", [(64, 128), (257, 256)])
+def test_significance_filter_vs_ref(n, b):
+    x = jnp.asarray(RS.randn(n, b), jnp.float32)
+    kept, resid, mask = ops.significance_filter(x, threshold=1.0)
+    k2, r2, m2 = ref.significance_filter(x, threshold=1.0)
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(m2))
+    np.testing.assert_allclose(np.asarray(kept), np.asarray(k2),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(resid), np.asarray(r2),
+                               atol=1e-6)
+
+
 @pytest.mark.parametrize("n,b", [(64, 128), (1000, 256)])
 def test_significance_filter_conservation(n, b):
     x = jnp.asarray(RS.randn(n, b), jnp.float32)

@@ -186,12 +186,12 @@ def test_vectorized_sweep_50x_faster_than_scalar_loop():
     sweep_analytic(grid)                    # warm
     t_vec = float("inf")
     for _ in range(5):
-        t0 = time.perf_counter()
+        t0 = time.perf_counter()  # repro: allow[no-wallclock] -- slow-marked perf floor measures real speedup
         sweep_analytic(grid)
-        t_vec = min(t_vec, time.perf_counter() - t0)
-    t0 = time.perf_counter()
+        t_vec = min(t_vec, time.perf_counter() - t0)  # repro: allow[no-wallclock] -- slow-marked perf floor measures real speedup
+    t0 = time.perf_counter()  # repro: allow[no-wallclock] -- slow-marked perf floor measures real speedup
     scalar_sweep(grid)
-    t_sca = time.perf_counter() - t0
+    t_sca = time.perf_counter() - t0  # repro: allow[no-wallclock] -- slow-marked perf floor measures real speedup
     assert t_sca / t_vec >= 50, (t_sca, t_vec)
 
 
@@ -218,10 +218,10 @@ def test_event_runtime_5x_faster_than_reference():
     def best(mod, n=200):
         t = float("inf")
         for _ in range(3):
-            t0 = time.perf_counter()
+            t0 = time.perf_counter()  # repro: allow[no-wallclock] -- slow-marked perf floor measures real speedup
             for _ in range(n):
                 mod.run_event_epoch("allreduce", **kw)
-            t = min(t, (time.perf_counter() - t0) / n)
+            t = min(t, (time.perf_counter() - t0) / n)  # repro: allow[no-wallclock] -- slow-marked perf floor measures real speedup
         return t
 
     t_ref, t_opt = best(ref), best(opt)
