@@ -3,7 +3,7 @@
 Prints ``name,value,derived`` CSV rows.  Usage:
     PYTHONPATH=src python -m benchmarks.run [--only table2|fig23|table3|
         roofline|strategy_matrix|fault_tolerance|sweep|knee|trace|
-        adversarial|serving|recovery]
+        adversarial|serving|recovery|kernels]
 """
 from __future__ import annotations
 
@@ -18,9 +18,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (adversarial_curves, fault_tolerance,
-                            fig23_comm, pareto_sweep, recovery_replay,
-                            roofline_report, serving_sweep,
-                            strategy_matrix, table2_cost,
+                            fig23_comm, kernel_bench, pareto_sweep,
+                            recovery_replay, roofline_report,
+                            serving_sweep, strategy_matrix, table2_cost,
                             table3_convergence, trace_replay)
     suites = {
         "table2": table2_cost.run,
@@ -35,6 +35,7 @@ def main() -> None:
         "adversarial": adversarial_curves.run,
         "serving": serving_sweep.run,
         "recovery": recovery_replay.run,
+        "kernels": kernel_bench.run,
     }
     if args.only:
         suites = {args.only: suites[args.only]}

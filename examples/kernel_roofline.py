@@ -1,0 +1,93 @@
+"""Walkthrough: reading a kernel's roofline from BENCH_kernels.json.
+
+Every public Pallas kernel in ``repro.kernels`` ships three
+executables of the same math:
+
+  1. the Mosaic kernel (``interpret=False``, TPU),
+  2. its CPU production twin — a fused-jnp formulation for the
+     robust-aggregation set, ``models.attention.chunked_attention``
+     for sliding-window attention — selected automatically when
+     ``interpret=None`` off-TPU,
+  3. the pure-jnp oracle in ``kernels/ref.py`` that parity tests and
+     the bench compare against.
+
+``benchmarks/kernel_bench.py`` times (2) vs (3) and gates both floors;
+this example re-derives the *analytic* side of those rows without any
+timing: bytes each aggregation must touch, the compiler-confirmed IO
+of the jitted computation (``hlo_analysis.entry_io_bytes``), and the
+machine-independent minimum seconds at a given stream bandwidth —
+then shows the ``use_pallas`` switch on a recovery aggregator.
+
+Run::
+
+    PYTHONPATH=src python examples/kernel_roofline.py
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.costmodel.hlo_analysis import entry_io_bytes
+from repro.kernels import ref, robust_agg
+from repro.serverless.recovery import krum
+
+W, D = 8, 250_000                      # a mobilenet-sized [W, D] stack
+FP32 = 4
+
+
+def main():
+    rng = np.random.default_rng(0)
+    stacked = jnp.asarray(rng.standard_normal((W, D), dtype=np.float32))
+
+    # --- analytic bytes: what any krum implementation must touch -----
+    touched = W * D * FP32             # read every row once
+    oracle_peak = W * W * D * FP32     # ref materializes [W, W, D]
+    print(f"krum [W={W}, D={D:,}]")
+    print(f"  bytes any implementation must read : {touched:>13,}")
+    print(f"  ref.py broadcast peak              : {oracle_peak:>13,}"
+          f"  ({oracle_peak / touched:.0f}x)")
+
+    # --- compiler-confirmed IO of the Gram-form production path ------
+    jitted = jax.jit(robust_agg.krum_pairwise)
+    hlo = jitted.lower(stacked).compile().as_text()
+    param_b, result_b = entry_io_bytes(hlo)
+    print(f"  compiled ENTRY io (param, result)  : "
+          f"{param_b:,} + {result_b:,}")
+
+    # --- minimum achievable seconds at a given stream bandwidth ------
+    # (kernel_bench measures the bandwidth with a triad probe and
+    # records it in BENCH_kernels.json; 5 GB/s is this container's
+    # ballpark, a v5p HBM stream is ~2 TB/s)
+    for name, bw in (("container-cpu", 5e9), ("tpu-v5p-hbm", 2.7e12)):
+        print(f"  roofline floor @ {name:<14}: "
+              f"{(param_b + result_b) / bw * 1e3:9.3f} ms")
+
+    # --- the floors the bench actually gated, if the payload exists --
+    if os.path.exists("BENCH_kernels.json"):
+        with open("BENCH_kernels.json") as f:
+            payload = json.load(f)
+        for row in payload["results"]:
+            if row["kernel"] == "krum_pairwise":
+                print(f"  BENCH row [{row['config']}]: "
+                      f"speedup {row['speedup']:.1f}x vs oracle, "
+                      f"roofline_frac {row['roofline_frac']:.2f}, "
+                      f"passed={row['passed']}")
+
+    # --- same numbers, same selection: use_pallas on the aggregator --
+    jnp_pick = krum(stacked, f=1, use_pallas=False)
+    kern_pick = krum(stacked, f=1, use_pallas=True)
+    gap = float(jnp.max(jnp.abs(jnp_pick - kern_pick)))
+    print(f"  krum(use_pallas=True) vs jnp path  : max |diff| = {gap:.2e}")
+
+    # the oracle agrees too (rtol-sized: Gram form trades the exact
+    # difference for cancellation-prone ||xi||^2 + ||xj||^2 - 2<xi,xj>)
+    d_ref = ref.krum_pairwise(stacked)
+    d_kern = robust_agg.krum_pairwise(stacked)
+    rel = float(jnp.max(jnp.abs(d_ref - d_kern)) / jnp.max(d_ref))
+    print(f"  pairwise matrix vs ref oracle      : max rel = {rel:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,7 @@
 relies on (golden snapshots, bit-reproducible BENCH sweeps, PR 7's
 bit-exact replay) but until now only enforced *after* a violation ran.
 
-Importing this module registers all five; ``repro.analysis.__init__``
+Importing this module registers all six; ``repro.analysis.__init__``
 does so eagerly, mirroring how ``repro.serverless.archs`` registers the
 paper architectures at import.
 """
@@ -433,3 +433,88 @@ register_rule(RuleSpec(
              "(kernels/ref.py + tests/test_kernels.py); an untwinned "
              "kernel is an unverifiable fast path",
     check=check_kernel_ref_parity))
+
+
+# ---------------------------------------------------------------------------
+# kernel-interpret-default — the interpreter is a validation escape
+# hatch, never the production default
+# ---------------------------------------------------------------------------
+def _is_pallas_call(qual: Optional[str]) -> bool:
+    return bool(qual) and qual.rsplit(".", 1)[-1] == "pallas_call"
+
+
+def _calls_pallas(mod, fi) -> bool:
+    for node in _own_nodes(mod, fi):
+        if isinstance(node, ast.Call) and _is_pallas_call(
+                mod.resolve(node.func)):
+            return True
+    return False
+
+
+def _interpret_default(fi):
+    """Default expression bound to an ``interpret`` parameter of ``fi``
+    (None when the parameter is absent or required)."""
+    args = fi.node.args
+    pos = args.posonlyargs + args.args
+    for a, d in zip(pos[len(pos) - len(args.defaults):], args.defaults):
+        if a.arg == "interpret":
+            return d
+    for a, d in zip(args.kwonlyargs, args.kw_defaults):
+        if a.arg == "interpret" and d is not None:
+            return d
+    return None
+
+
+def check_kernel_interpret_default(
+        ctx: AnalysisContext) -> Iterable[Finding]:
+    cg = ctx.callgraph
+    for rel, mod in sorted(ctx.modules.items()):
+        if mod.parts[0] == "tests" or mod.basename.startswith("test_"):
+            continue        # parity tests force the interpreter on CPU
+        # (1) literal interpret=True at a pallas_call site in src/
+        for call, qual in mod.walk_calls():
+            if not _is_pallas_call(qual):
+                continue
+            for kw in call.keywords:
+                if (kw.arg == "interpret"
+                        and isinstance(kw.value, ast.Constant)
+                        and kw.value.value is True):
+                    yield Finding(
+                        mod.rel, call.lineno, "kernel-interpret-default",
+                        "pallas_call(interpret=True) hard-codes the "
+                        "interpreter in a production call path; thread "
+                        "an interpret= parameter resolved through the "
+                        "ops backend auto-detect instead")
+        # (2) public kernel entry points defaulting interpret=True
+        if not mod.in_dir("kernels"):
+            continue
+        for fi in mod.functions:
+            if "." in fi.name or fi.name.startswith("_"):
+                continue
+            d = _interpret_default(fi)
+            if not (isinstance(d, ast.Constant) and d.value is True):
+                continue
+            key = (rel, fi.name)
+            reaches_pallas = _calls_pallas(mod, fi) or any(
+                k in cg._defs
+                and _calls_pallas(ctx.modules[k[0]], cg._defs[k])
+                for k in cg.closure(key))
+            if reaches_pallas:
+                yield Finding(
+                    mod.rel, fi.node.lineno, "kernel-interpret-default",
+                    f"public Pallas entry point {fi.name!r} defaults "
+                    "interpret=True; default to None and resolve via "
+                    "the ops backend auto-detect (the interpreter is a "
+                    "validation escape hatch, not a production path)")
+
+
+register_rule(RuleSpec(
+    rule_id="kernel-interpret-default",
+    description="no public Pallas entry point defaults or hard-codes "
+                "interpret=True outside tests",
+    contract="interpret= is the escape hatch: None auto-detects the "
+             "backend (ops.default_interpret), True is the CPU "
+             "validation mode parity tests opt into; a hard-coded True "
+             "ships the ~40x-slower interpreter as the production path "
+             "and masks Mosaic lowering breakage",
+    check=check_kernel_interpret_default))

@@ -57,6 +57,24 @@ def _shape_bytes(shape_str: str) -> int:
     return total
 
 
+_ENTRY_RE = re.compile(
+    r"^ENTRY\s+%?[\w\.\-]+\s*\((.*?)\)\s*->\s*(.+?)\s*\{\s*$",
+    re.MULTILINE)
+
+
+def entry_io_bytes(hlo: str) -> Tuple[int, int]:
+    """(parameter_bytes, result_bytes) of the module's ENTRY
+    computation — the compiler-confirmed memory floor of one call:
+    every input must be read at least once and every output written
+    once, so ``param + result`` bytes over the machine's stream
+    bandwidth lower-bounds achievable wall-clock (the kernel-bench
+    roofline gate).  Returns (0, 0) when no ENTRY header parses."""
+    m = _ENTRY_RE.search(hlo)
+    if not m:
+        return 0, 0
+    return _shape_bytes(m.group(1)), _shape_bytes(m.group(2))
+
+
 @dataclasses.dataclass
 class CollectiveStats:
     counts: Dict[str, int]

@@ -21,8 +21,12 @@ def _norm_kernel(x_ref, o_ref):
     o_ref[...] = jnp.sum(x * x, axis=1, keepdims=True)
 
 
-def block_norms(blocks, *, tile_rows=256, interpret=True):
-    """blocks: (n_blocks, block) -> squared L2 norm per block (n_blocks,)."""
+def block_norms(blocks, *, tile_rows=256, interpret=None):
+    """blocks: (n_blocks, block) -> squared L2 norm per block (n_blocks,).
+    ``interpret=None`` auto-detects the backend via
+    ``ops.resolve_interpret``."""
+    from repro.kernels import ops as _ops
+    interpret = _ops.resolve_interpret(interpret)
     n, b = blocks.shape
     tile_rows = min(tile_rows, n)
     pad = (-n) % tile_rows
@@ -48,8 +52,12 @@ def _filter_kernel(x_ref, m_ref, keep_ref, resid_ref):
     resid_ref[...] = (x - kept).astype(resid_ref.dtype)
 
 
-def masked_filter(blocks, mask, *, tile_rows=256, interpret=True):
-    """blocks: (n, b); mask: (n,) bool -> (kept (n,b), residual (n,b))."""
+def masked_filter(blocks, mask, *, tile_rows=256, interpret=None):
+    """blocks: (n, b); mask: (n,) bool -> (kept (n,b), residual (n,b)).
+    ``interpret=None`` auto-detects the backend via
+    ``ops.resolve_interpret``."""
+    from repro.kernels import ops as _ops
+    interpret = _ops.resolve_interpret(interpret)
     n, b = blocks.shape
     tile_rows = min(tile_rows, n)
     pad = (-n) % tile_rows

@@ -32,8 +32,12 @@ def _adamw_kernel(g_ref, m_ref, v_ref, p_ref, c_ref,
 
 
 def fused_adamw_flat(g, m, v, p, c1, c2, *, lr, b1, b2, eps, wd,
-                     tile=(256, 256), interpret=True):
-    """All operands 1-D of equal length; returns (update, m_new, v_new)."""
+                     tile=(256, 256), interpret=None):
+    """All operands 1-D of equal length; returns (update, m_new, v_new).
+    ``interpret=None`` auto-detects the backend (Mosaic on TPU, the
+    interpreter elsewhere) via ``ops.resolve_interpret``."""
+    from repro.kernels import ops as _ops
+    interpret = _ops.resolve_interpret(interpret)
     n = g.shape[0]
     rows, cols = tile
     per = rows * cols

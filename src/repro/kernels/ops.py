@@ -4,8 +4,12 @@
 attention with the pure-jnp reference (flash-style recompute — no
 O(S^2) residuals saved), so the kernel is usable inside ``jax.grad``.
 
-``INTERPRET`` is True on CPU (kernel bodies execute as jnp — the
-validation mode for this container) and False on TPU (Mosaic lowering).
+``default_interpret()`` is the shared backend auto-detect every kernel
+module resolves its ``interpret=None`` default through: Mosaic lowering
+on TPU, the Pallas interpreter everywhere else (the validation mode for
+this container).  Production call paths must never hard-code
+``interpret=True`` — the ``kernel-interpret-default`` lint rule pins
+this; pass ``interpret=`` explicitly only in parity tests.
 """
 from __future__ import annotations
 
@@ -19,7 +23,18 @@ from repro.kernels import fused_adamw as _fa
 from repro.kernels import ref as _ref
 from repro.kernels import swa_attention as _swa
 
-INTERPRET = jax.default_backend() == "cpu"
+
+def default_interpret() -> bool:  # repro: allow[kernel-ref-parity] -- backend helper, not a kernel
+    """True off-TPU: only Mosaic can lower these kernels natively."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret) -> bool:  # repro: allow[kernel-ref-parity] -- backend helper, not a kernel
+    """Resolve an ``interpret=`` escape hatch: None -> auto-detect."""
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+INTERPRET = default_interpret()
 
 
 # ---------------------------------------------------------------------------

@@ -76,6 +76,45 @@ def wkv6(r, k, v, logw, u):
     return ys.transpose(1, 0, 2, 3).astype(r.dtype)
 
 
+# ---------------------------------------------------------------------------
+# robust-aggregation reductions (oracles for kernels/robust_agg.py)
+# ---------------------------------------------------------------------------
+def trimmed_mean(stacked, trim=1):
+    """Full-sort interior mean over axis 0 of a [W, ...] stack (the
+    O(W log W)-per-coordinate reference the kernel's masked one-pass /
+    sorting-network forms must match)."""
+    W = stacked.shape[0]
+    s = jnp.sort(stacked.astype(jnp.float32), axis=0)
+    return jnp.mean(jax.lax.slice_in_dim(s, trim, W - trim, axis=0),
+                    axis=0)
+
+
+def coordinate_median(stacked):
+    """Per-coordinate median over axis 0 (jnp.median semantics: even W
+    averages the two middle order statistics)."""
+    return jnp.median(stacked.astype(jnp.float32), axis=0)
+
+
+def krum_pairwise(stacked):
+    """W x W squared Euclidean distances via the explicit [W, W, D]
+    broadcast (exactly what recovery.krum materializes today — the HBM
+    blowup the kernel's Gram-accumulation form exists to avoid)."""
+    W = stacked.shape[0]
+    flat = stacked.reshape(W, -1).astype(jnp.float32)
+    return jnp.sum((flat[:, None, :] - flat[None, :, :]) ** 2, axis=-1)
+
+
+def weiszfeld_step(stacked, z, floor):
+    """One naive Weiszfeld iteration: materialize the [W, D] residual,
+    take row norms, re-weight (oracle for the fused kernel step)."""
+    W = stacked.shape[0]
+    flat = stacked.reshape(W, -1).astype(jnp.float32)
+    z = z.reshape(-1).astype(jnp.float32)
+    dist = jnp.linalg.norm(flat - z[None, :], axis=-1)
+    w = 1.0 / jnp.maximum(dist, floor)
+    return jnp.sum(w[:, None] * flat, axis=0) / jnp.sum(w)
+
+
 def fused_adamw_flat(g, m, v, p, c1, c2, *, lr, b1, b2, eps, wd):
     gf = g.astype(jnp.float32)
     pf = p.astype(jnp.float32)

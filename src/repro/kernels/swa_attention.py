@@ -79,8 +79,12 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, window, causal, q_block,
 
 
 def swa_attention_fwd(q, k, v, *, window=None, causal=True,
-                      q_block=256, kv_block=256, interpret=True):
-    """q: (B, S, H, hd); k, v: (B, S, KV, hd).  Returns (B, S, H, hd)."""
+                      q_block=256, kv_block=256, interpret=None):
+    """q: (B, S, H, hd); k, v: (B, S, KV, hd).  Returns (B, S, H, hd).
+    ``interpret=None`` auto-detects the backend (Mosaic on TPU, the
+    interpreter elsewhere) via ``ops.resolve_interpret``."""
+    from repro.kernels import ops as _ops
+    interpret = _ops.resolve_interpret(interpret)
     B, S, H, hd = q.shape
     KV = k.shape[2]
     G = H // KV

@@ -69,8 +69,12 @@ def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, *, chunk,
     jax.lax.fori_loop(0, n_chunks, chunk_body, S0)
 
 
-def wkv6_chunked(r, k, v, logw, u, *, chunk=64, interpret=True):
-    """r,k,v,logw: (B, T, H, N) with T % chunk == 0; u: (H, N)."""
+def wkv6_chunked(r, k, v, logw, u, *, chunk=64, interpret=None):
+    """r,k,v,logw: (B, T, H, N) with T % chunk == 0; u: (H, N).
+    ``interpret=None`` auto-detects the backend (Mosaic on TPU, the
+    interpreter elsewhere) via ``ops.resolve_interpret``."""
+    from repro.kernels import ops as _ops
+    interpret = _ops.resolve_interpret(interpret)
     B, T, H, N = r.shape
     assert T % chunk == 0, (T, chunk)
     kernel = functools.partial(_wkv_kernel, chunk=chunk, seq_len=T)

@@ -100,6 +100,14 @@ class RecoveryEvent:
 
 # ---------------------------------------------------------------------------
 # Robust reduction statistics (pure functions, unit-testable on CPU)
+#
+# Each statistic has a ``use_pallas`` switch routing the hot reduction
+# through the tiled kernels in ``repro.kernels.robust_agg`` (Gram-
+# accumulated Krum distances, masked/sorting-network trimmed mean,
+# fused Weiszfeld step).  The default ``False`` keeps the original jnp
+# formulations bit-exact — golden snapshots, BENCH_adversarial.json and
+# the numpy twins in ``adversarial.py`` pin those paths; the kernels
+# are parity-tested against them in ``tests/test_robust_agg.py``.
 # ---------------------------------------------------------------------------
 def trimmed_mean_sort(stacked, trim: int):
     """Reference implementation: full sort over the worker axis, then
@@ -113,7 +121,7 @@ def trimmed_mean_sort(stacked, trim: int):
     return jnp.mean(jax.lax.slice_in_dim(s, trim, W - trim, axis=0), axis=0)
 
 
-def trimmed_mean(stacked, trim: int):
+def trimmed_mean(stacked, trim: int, use_pallas: bool = False):
     """Mean over axis 0 after dropping the ``trim`` smallest and largest
     values per coordinate.  ``stacked``: [W, ...]; needs W > 2*trim.
 
@@ -125,11 +133,17 @@ def trimmed_mean(stacked, trim: int):
     mass into the grand total and cancellation would destroy it on the
     subtraction — the exact attack this aggregator defends against
     (``tests/test_robust_agg.py`` checks equivalence against
-    :func:`trimmed_mean_sort`, including that adversarial case)."""
+    :func:`trimmed_mean_sort`, including that adversarial case).
+
+    ``use_pallas`` routes through the D-tiled kernel
+    (:func:`repro.kernels.robust_agg.trimmed_mean`, fp32 out)."""
     W = stacked.shape[0]
     if W <= 2 * trim:
         raise ValueError(f"trimmed_mean needs W > 2*trim, got W={W}, "
                          f"trim={trim}")
+    if use_pallas:
+        from repro.kernels import robust_agg
+        return robust_agg.trimmed_mean(stacked, trim)
     if trim == 1:
         imin = jnp.argmin(stacked, axis=0)
         imax = jnp.argmax(stacked, axis=0)
@@ -143,12 +157,15 @@ def trimmed_mean(stacked, trim: int):
     return trimmed_mean_sort(stacked, trim)
 
 
-def coordinate_median(stacked):
+def coordinate_median(stacked, use_pallas: bool = False):
     """Per-coordinate median over axis 0 of a [W, ...] stack."""
+    if use_pallas:
+        from repro.kernels import robust_agg
+        return robust_agg.coordinate_median(stacked)
     return jnp.median(stacked, axis=0)
 
 
-def krum(stacked, f: int = 1, m: int = 1):
+def krum(stacked, f: int = 1, m: int = 1, use_pallas: bool = False):
     """(Multi-)Krum (Blanchard et al., NeurIPS 2017) over axis 0 of a
     ``[W, ...]`` stack: score every row by the summed squared distance
     to its ``W - f - 2`` nearest neighbours (closer neighbourhoods =
@@ -165,20 +182,31 @@ def krum(stacked, f: int = 1, m: int = 1):
     if not 1 <= m <= W:
         raise ValueError(f"krum needs 1 <= m <= W, got m={m}")
     flat = stacked.reshape(W, -1).astype(jnp.float32)
-    d = jnp.sum((flat[:, None, :] - flat[None, :, :]) ** 2, axis=-1)
+    if use_pallas:
+        # Gram-accumulated [W, W] distances over D-tiles: never
+        # materializes the [W, W, D] broadcast in HBM.
+        from repro.kernels import robust_agg
+        d = robust_agg.krum_pairwise(stacked)
+    else:
+        d = jnp.sum((flat[:, None, :] - flat[None, :, :]) ** 2, axis=-1)
     ds = jnp.sort(d, axis=-1)                  # col 0 is self (0.0)
     scores = jnp.sum(ds[:, 1:W - f - 1], axis=-1)
     sel = jnp.argsort(scores, stable=True)[:m]
     return jnp.mean(stacked[sel].astype(jnp.float32), axis=0)
 
 
-def geometric_median(stacked, tol: float = 1e-6, max_iter: int = 100):
+def geometric_median(stacked, tol: float = 1e-6, max_iter: int = 100,
+                     use_pallas: bool = False):
     """Geometric median over axis 0 of a ``[W, ...]`` stack by
     Weiszfeld iteration — the point minimizing the summed Euclidean
     distance to every row; breakdown point (W-1)/2W.  Initialized at
     the coordinate median; iterates until the step shrinks below
     ``tol`` relative to the stack's largest row norm (tolerance-bounded)
-    or ``max_iter`` passes."""
+    or ``max_iter`` passes.
+
+    ``use_pallas`` swaps the loop body for the fused distance+reweight
+    kernel (:func:`repro.kernels.robust_agg.weiszfeld_step`) with the
+    per-row squared norms hoisted out of the loop."""
     if tol <= 0 or max_iter < 1:
         raise ValueError(f"geometric_median needs tol > 0 and "
                          f"max_iter >= 1, got tol={tol}, "
@@ -186,13 +214,23 @@ def geometric_median(stacked, tol: float = 1e-6, max_iter: int = 100):
     W = stacked.shape[0]
     flat = stacked.reshape(W, -1).astype(jnp.float32)
     scale = jnp.maximum(jnp.max(jnp.linalg.norm(flat, axis=-1)), 1e-12)
+    floor = 1e-12 * scale
+    if use_pallas:
+        from repro.kernels import robust_agg
+        sqnorms = jnp.sum(flat * flat, axis=1)
 
-    def body(carry):
-        z, _, i = carry
-        dist = jnp.linalg.norm(flat - z[None, :], axis=-1)
-        w = 1.0 / jnp.maximum(dist, 1e-12 * scale)
-        z_new = jnp.sum(w[:, None] * flat, axis=0) / jnp.sum(w)
-        return z_new, jnp.linalg.norm(z_new - z), i + 1
+        def body(carry):
+            z, _, i = carry
+            z_new = robust_agg.weiszfeld_step(flat, z, floor,
+                                              row_sqnorms=sqnorms)
+            return z_new, jnp.linalg.norm(z_new - z), i + 1
+    else:
+        def body(carry):
+            z, _, i = carry
+            dist = jnp.linalg.norm(flat - z[None, :], axis=-1)
+            w = 1.0 / jnp.maximum(dist, floor)
+            z_new = jnp.sum(w[:, None] * flat, axis=0) / jnp.sum(w)
+            return z_new, jnp.linalg.norm(z_new - z), i + 1
 
     def cond(carry):
         _, step, i = carry
@@ -220,8 +258,23 @@ class _RobustAggregate(Strategy):
     (per-leaf dispatch was the hot cost at SPIRT's per-minibatch sync
     cadence).  ``sync_per_leaf`` keeps the original per-leaf path as
     the semantic reference; ``tests/test_robust_agg.py`` checks the
-    two agree."""
+    two agree.
+
+    ``use_pallas`` selects the tiled kernels in
+    ``repro.kernels.robust_agg`` for the reduction.  ``None`` (the
+    default) auto-detects: kernels on TPU, the original jnp
+    formulations elsewhere — so CPU golden snapshots and
+    BENCH_adversarial.json stay bit-identical.  ``True``/``False``
+    force the choice (parity tests pin the two paths against each
+    other)."""
     name: str = "robust"
+    use_pallas: Optional[bool] = None
+
+    def _kernels_enabled(self) -> bool:
+        if self.use_pallas is None:
+            from repro.kernels.ops import default_interpret
+            return not default_interpret()      # kernels only on TPU
+        return bool(self.use_pallas)
 
     def _reduce(self, stacked):
         raise NotImplementedError
@@ -265,7 +318,8 @@ class TrimmedMean(_RobustAggregate):
     trim: int = 1
 
     def _reduce(self, stacked):
-        return trimmed_mean(stacked, self.trim)
+        return trimmed_mean(stacked, self.trim,
+                            use_pallas=self._kernels_enabled())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -274,7 +328,8 @@ class CoordinateMedian(_RobustAggregate):
     name: str = "coordinate_median"
 
     def _reduce(self, stacked):
-        return coordinate_median(stacked)
+        return coordinate_median(stacked,
+                                 use_pallas=self._kernels_enabled())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -299,7 +354,8 @@ class Krum(_RobustAggregate):
             raise ValueError(f"krum needs m >= 1, got m={self.m}")
 
     def _reduce(self, stacked):
-        return krum(stacked, self.f, self.m)
+        return krum(stacked, self.f, self.m,
+                    use_pallas=self._kernels_enabled())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -319,4 +375,5 @@ class GeometricMedian(_RobustAggregate):
                 f"got tol={self.tol}, max_iter={self.max_iter}")
 
     def _reduce(self, stacked):
-        return geometric_median(stacked, self.tol, self.max_iter)
+        return geometric_median(stacked, self.tol, self.max_iter,
+                                use_pallas=self._kernels_enabled())

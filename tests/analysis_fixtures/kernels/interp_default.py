@@ -1,0 +1,23 @@
+"""Fixture Pallas entries: the interpreter hard-coded both ways
+(default-True parameter and a literal call-site keyword)."""
+from jax.experimental import pallas as pl
+
+
+def _copy_body(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def interp_entry(x, interpret=True):
+    return pl.pallas_call(_copy_body, out_shape=x,
+                          interpret=interpret)(x)
+
+
+def forced_interp(x):
+    return pl.pallas_call(_copy_body, out_shape=x, interpret=True)(x)
+
+
+def auto_entry(x, interpret=None):
+    if interpret is None:
+        interpret = False
+    return pl.pallas_call(_copy_body, out_shape=x,
+                          interpret=interpret)(x)

@@ -7,3 +7,15 @@ def fused_scale(x, s):
 
 def half_covered(x):
     return x + 1
+
+
+def interp_entry(x):
+    return x
+
+
+def forced_interp(x):
+    return x
+
+
+def auto_entry(x):
+    return x

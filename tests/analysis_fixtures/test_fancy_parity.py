@@ -1,6 +1,13 @@
 """Fixture parity test: covers fused_scale, not half_covered."""
-from kernels import fancy, ref
+from kernels import fancy, interp_default, ref
 
 
 def test_fused_scale_parity():
     assert fancy.fused_scale(2.0, 3.0) == ref.fused_scale(2.0, 3.0)
+
+
+def test_interp_default_fixture_parity():
+    pairs = [(interp_default.interp_entry, ref.interp_entry),
+             (interp_default.forced_interp, ref.forced_interp),
+             (interp_default.auto_entry, ref.auto_entry)]
+    assert all(k is not r for k, r in pairs)

@@ -32,6 +32,8 @@ FIXTURES = Path(__file__).parent / "analysis_fixtures"
 EXPECTED = frozenset({
     ("kernels/fancy.py", 8, "kernel-ref-parity"),
     ("kernels/fancy.py", 12, "kernel-ref-parity"),
+    ("kernels/interp_default.py", 10, "kernel-interpret-default"),
+    ("kernels/interp_default.py", 16, "kernel-interpret-default"),
     ("reporting/wallclock.py", 7, "no-wallclock"),
     ("reporting/wallclock.py", 8, "no-wallclock"),
     ("serverless/global_rng.py", 6, "seeded-rng"),
@@ -49,7 +51,8 @@ EXPECTED = frozenset({
 })
 EXPECTED_LIST = sorted(EXPECTED)
 BUILTIN_RULES = ("seeded-rng", "no-wallclock", "frozen-spec-mutation",
-                 "trace-safety", "kernel-ref-parity")
+                 "trace-safety", "kernel-ref-parity",
+                 "kernel-interpret-default")
 
 
 @functools.lru_cache(maxsize=1)
@@ -198,7 +201,7 @@ def test_syntax_error_is_a_finding():
 # registry contracts (mirrors serverless.archs semantics)
 # ---------------------------------------------------------------------------
 def test_builtin_rules_registered_in_order():
-    assert registry.list_rules()[:5] == BUILTIN_RULES
+    assert registry.list_rules()[:6] == BUILTIN_RULES
 
 
 def test_duplicate_registration_is_an_error():
