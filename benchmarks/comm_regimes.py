@@ -1,0 +1,341 @@
+"""Compressed / asynchronous communication regimes — the PR-10 family.
+
+The registry now carries barrier-free and compressed variants of the
+paper architectures (``local_sgd``, ``async_spirt``, ``async_spirt_q8``,
+``scatterreduce_q8``, ``spirt_sf``).  This benchmark prices them against
+their dense synchronous parents and answers the headline question with a
+chart: *does async SPIRT dominate the sync Pareto front once measured
+cold-start tails (the PR-3 Lambda trace) are replayed?*  Three sections,
+recorded in a content-hashed ``BENCH_comm.json``:
+
+  1. *Wire accounting* — per-arch bytes-per-epoch from the analytic
+     simulator, pinned against the real JAX strategies' ``comm_bytes``
+     billing (the int8 scatter-reduce payload and the significance
+     fraction must price identically in both worlds).
+  2. *Compression x architecture x fault rate* — every compressed arch
+     vs its dense parent swept under increasing crash rates
+     (``sweep_events``), plus an analytic channel sweep (Redis vs S3)
+     showing where compression buys the most.
+  3. *Pareto under measured tails* — the joint cost-vs-makespan front
+     over (arch x fleet size) with the measured Lambda trace replayed;
+     reports front membership, the fraction of synchronous configs
+     dominated by a barrier-free one, and draws ``comm_pareto.png``.
+
+The payload hash covers everything except wall-clock timings; two runs
+with equal (grid, seed) must produce byte-identical deterministic
+sections — section 3 asserts that before writing.
+
+Rows: comm/<section>/<name>,value,notes
+Usage:
+    PYTHONPATH=src python -m benchmarks.comm_regimes [--quick]
+        [--json BENCH_comm.json] [--chart comm_pareto.png]
+        [--processes N]
+    PYTHONPATH=src python -m benchmarks.run --only comm
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import time
+
+import numpy as np
+
+from repro.serverless import lambda_default
+from repro.serverless.archs import COMPRESSION_SCHEMES, get_arch
+from repro.serverless.simulator import (REDIS, S3, paper_compute_anchor,
+                                        simulate_epoch)
+from repro.serverless.sweep import (EventSweepPoint, FaultRates,
+                                    SweepGrid, pareto_front,
+                                    sweep_analytic, sweep_events)
+
+N_PARAMS = int(4.2e6)                    # MobileNet
+SEED = 10
+SIG_FRACTION = 0.3                       # spirt_sf effective density
+
+# compressed arch -> its dense synchronous parent
+PAIRS = (("scatterreduce_q8", "scatterreduce"),
+         ("spirt_sf", "spirt"),
+         ("async_spirt_q8", "async_spirt"))
+SYNC_ARCHS = ("spirt", "scatterreduce", "spirt_sf", "scatterreduce_q8",
+              "local_sgd")
+ASYNC_ARCHS = ("async_spirt", "async_spirt_q8")
+ALL_ARCHS = SYNC_ARCHS + ASYNC_ARCHS
+
+
+# ---------------------------------------------------------------------------
+# 1. wire-byte accounting: analytic schemes vs real strategy billing
+# ---------------------------------------------------------------------------
+def bench_wire(csv_rows) -> dict:
+    out = {}
+    epochs = {a: simulate_epoch(a, n_params=N_PARAMS,
+                                compute_s_per_batch=0.9,
+                                significant_fraction=SIG_FRACTION)
+              for a in ALL_ARCHS}
+    for arch, rep in epochs.items():
+        csv_rows.append((f"comm/wire/{arch}/bytes_per_worker",
+                         rep.comm_bytes_per_worker,
+                         f"sync_s={rep.stages.sync:.3f}"))
+        out[arch] = dict(comm_bytes_per_worker=rep.comm_bytes_per_worker,
+                         sync_s=rep.stages.sync,
+                         total_cost=rep.total_cost)
+
+    # the analytic compression scheme and the shipped JAX strategy must
+    # bill the same bytes-per-gradient-byte or the sweeps lie
+    from repro.core.compression import QuantizedScatterReduce
+    from repro.core.strategies import get_strategy
+    W = 4
+    grads = [np.zeros(N_PARAMS, np.float32)]
+    dense_ring = get_strategy("scatterreduce").comm_bytes(grads, W)
+    qsr = QuantizedScatterReduce()
+    parity = {}
+    ratio = qsr.comm_bytes(grads, W) / dense_ring
+    scheme = COMPRESSION_SCHEMES["int8"](SIG_FRACTION)
+    parity["int8"] = dict(strategy_ratio=ratio, scheme_ratio=scheme)
+    assert abs(ratio / scheme - 1) < 1e-3, (ratio, scheme)
+    csv_rows.append(("comm/wire/int8_billing_parity", ratio,
+                     f"scheme={scheme:.6f} (QuantizedScatterReduce)"))
+    mll = get_strategy("mlless").comm_bytes(
+        grads, W, significant_fraction=SIG_FRACTION)
+    spirt_ring = get_strategy("spirt").comm_bytes(grads, W)
+    # mlless bills per step, spirt amortizes over K microbatches: compare
+    # both against the raw ring volume
+    ratio_sf = mll / (spirt_ring * get_strategy("spirt").microbatches)
+    scheme_sf = COMPRESSION_SCHEMES["significance"](SIG_FRACTION)
+    parity["significance"] = dict(strategy_ratio=ratio_sf,
+                                  scheme_ratio=scheme_sf)
+    assert abs(ratio_sf / scheme_sf - 1) < 1e-6, (ratio_sf, scheme_sf)
+    csv_rows.append(("comm/wire/significance_billing_parity", ratio_sf,
+                     f"scheme={scheme_sf:.6f} (MLLess)"))
+    return dict(per_arch=out, billing_parity=parity)
+
+
+# ---------------------------------------------------------------------------
+# 2. compression x architecture x fault rate
+# ---------------------------------------------------------------------------
+def bench_regimes(csv_rows, quick: bool, processes) -> dict:
+    # analytic arm: where does compression buy the most?  One channel
+    # per sweep — S3's thin pipe is where wire bytes dominate.
+    channels = {}
+    for ch in (REDIS, S3):
+        g = SweepGrid(n_params=N_PARAMS, compute_s_per_batch=0.9,
+                      archs=ALL_ARCHS, n_workers=(4,), channels=(ch,),
+                      significant_fraction=(SIG_FRACTION,))
+        v = sweep_analytic(g)
+        by_arch = {a: float(v.per_worker_s[list(v.arch).index(a)])
+                   for a in ALL_ARCHS}
+        channels[ch.name.lower()] = by_arch
+        for comp, dense in PAIRS:
+            speedup = by_arch[dense] / by_arch[comp]
+            csv_rows.append((f"comm/regimes/{comp}/{ch.name.lower()}"
+                             "_speedup", speedup,
+                             f"epoch_s dense={by_arch[dense]:.2f} "
+                             f"comp={by_arch[comp]:.2f}"))
+
+    # event arm: crash-rate sweep, compressed vs dense parent
+    rates = (0.0, 0.5) if quick else (0.0, 0.2, 0.5)
+    reps = 3 if quick else 8
+    fault_curves = {}
+    points = [EventSweepPoint(arch=a, n_params=N_PARAMS,
+                              compute_s_per_batch=paper_compute_anchor(a),
+                              label=a)
+              for a in ALL_ARCHS]
+    for rate in rates:
+        stats = sweep_events(points, rates=FaultRates(crash_rate=rate),
+                             n_replicates=reps, seed=SEED,
+                             processes=processes)
+        for s in stats:
+            fault_curves.setdefault(s.point.arch, []).append(dict(
+                crash_rate=rate, makespan_mean_s=s.makespan_mean_s,
+                cost_mean=s.cost_mean,
+                cost_overhead_mean=s.cost_overhead_mean))
+    for comp, dense in PAIRS:
+        worst = fault_curves[comp][-1]
+        worst_d = fault_curves[dense][-1]
+        csv_rows.append((f"comm/regimes/{comp}/crash{rates[-1]}"
+                         "_cost_ratio",
+                         worst["cost_mean"] / worst_d["cost_mean"],
+                         f"dense={dense} reps={reps}"))
+    return dict(analytic_by_channel=channels, fault_curves=fault_curves,
+                crash_rates=list(rates), replicates=reps)
+
+
+# ---------------------------------------------------------------------------
+# 3. Pareto under measured cold-start tails
+# ---------------------------------------------------------------------------
+def _dominates(a, b) -> bool:
+    """a dominates b on (cost, makespan): no worse on both, better on one."""
+    return (a[0] <= b[0] and a[1] <= b[1]
+            and (a[0] < b[0] or a[1] < b[1]))
+
+
+def bench_pareto(csv_rows, quick: bool, processes) -> dict:
+    trace = lambda_default()
+    fleets = (4, 16) if quick else (4, 8, 16)
+    reps = 3 if quick else 8
+    from repro.serverless.simulator import ServerlessSetup
+    points = [EventSweepPoint(
+                  arch=a, n_params=N_PARAMS,
+                  compute_s_per_batch=paper_compute_anchor(a),
+                  setup=ServerlessSetup(n_workers=W), label=f"{a}/W{W}")
+              for a in ALL_ARCHS for W in fleets]
+    kw = dict(rates=FaultRates(crash_rate=0.1), trace=trace,
+              n_replicates=reps, seed=SEED, processes=processes)
+    t0 = time.perf_counter()
+    stats = sweep_events(points, **kw)
+    elapsed = time.perf_counter() - t0
+
+    # bit-reproducibility receipt: the content hash is only meaningful
+    # if (grid, seed) pins every float in the payload
+    again = sweep_events(points[:2], **kw)
+    assert [(s.makespan_mean_s, s.cost_mean) for s in again] == \
+        [(s.makespan_mean_s, s.cost_mean) for s in stats[:2]], \
+        "equal-seed trace sweeps must agree bit-exactly"
+    csv_rows.append(("comm/pareto/bit_reproducible", 1,
+                     "two equal-seed trace sweeps agree exactly"))
+
+    costs = [s.cost_mean for s in stats]
+    makespans = [s.makespan_mean_s for s in stats]
+    front = set(pareto_front(costs, makespans).tolist())
+    rows = [dict(label=s.point.label, arch=s.point.arch,
+                 n_workers=s.point.setup.n_workers,
+                 cost_mean=s.cost_mean, makespan_mean_s=s.makespan_mean_s,
+                 makespan_p95_s=s.makespan_p95_s,
+                 cost_overhead_p95=s.cost_overhead_p95,
+                 on_front=i in front)
+            for i, s in enumerate(stats)]
+
+    front_archs = sorted({r["arch"] for r in rows if r["on_front"]})
+    async_pts = [(r["cost_mean"], r["makespan_mean_s"]) for r in rows
+                 if get_arch(r["arch"]).barrier_sync is False]
+    sync_rows = [r for r in rows if get_arch(r["arch"]).barrier_sync]
+    dominated = sum(
+        any(_dominates(a, (r["cost_mean"], r["makespan_mean_s"]))
+            for a in async_pts)
+        for r in sync_rows)
+    frac = dominated / len(sync_rows)
+    async_on_front = any(not get_arch(r["arch"]).barrier_sync
+                         for r in rows if r["on_front"])
+    sync_front_survives = any(get_arch(r["arch"]).barrier_sync
+                              for r in rows if r["on_front"])
+    verdict = ("async dominates the sync front" if not sync_front_survives
+               else "async joins but does not clear the sync front"
+               if async_on_front else "sync front stands")
+    csv_rows.append(("comm/pareto/front_size", len(front),
+                     "archs=" + ";".join(front_archs)))
+    csv_rows.append(("comm/pareto/sync_dominated_fraction", frac,
+                     f"{dominated}/{len(sync_rows)} sync configs beaten "
+                     "by a barrier-free one"))
+    csv_rows.append(("comm/pareto/async_on_front", int(async_on_front),
+                     verdict))
+    return dict(trace=trace.name, replicates=reps, fleets=list(fleets),
+                points=rows, front_archs=front_archs,
+                sync_dominated_fraction=frac,
+                async_on_front=async_on_front, verdict=verdict,
+                elapsed_s=elapsed)
+
+
+# ---------------------------------------------------------------------------
+# chart (matplotlib-gated, like the serving/knee benches)
+# ---------------------------------------------------------------------------
+_SERIES_COLORS = ("#2a78d6", "#eb6834", "#1baf7a", "#eda100", "#e87ba4",
+                  "#008300", "#4a3aa7", "#e34948")
+_SURFACE, _INK, _INK2 = "#fcfcfb", "#0b0b0b", "#52514e"
+
+
+def pareto_chart(pareto: dict, path: str):
+    """Cost vs makespan under the measured trace, front highlighted;
+    returns the path or None when matplotlib is unavailable."""
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        return None
+    fig, ax = plt.subplots(figsize=(7.5, 4.5), dpi=144)
+    fig.patch.set_facecolor(_SURFACE)
+    ax.set_facecolor(_SURFACE)
+    rows = pareto["points"]
+    for i, arch in enumerate(sorted({r["arch"] for r in rows})):
+        pts = [r for r in rows if r["arch"] == arch]
+        c = _SERIES_COLORS[i % len(_SERIES_COLORS)]
+        marker = "s" if get_arch(arch).barrier_sync else "o"
+        ax.scatter([r["cost_mean"] for r in pts],
+                   [r["makespan_mean_s"] for r in pts],
+                   s=26, color=c, marker=marker, label=arch, zorder=3,
+                   edgecolors=_SURFACE, linewidths=0.8)
+    fr = sorted((r for r in rows if r["on_front"]),
+                key=lambda r: r["cost_mean"])
+    ax.plot([r["cost_mean"] for r in fr],
+            [r["makespan_mean_s"] for r in fr],
+            "-", color=_INK, linewidth=1.2, zorder=2,
+            label="joint front")
+    ax.set_xlabel("epoch cost (USD, mean over fault replicates)",
+                  color=_INK2)
+    ax.set_ylabel("makespan (s)", color=_INK2)
+    ax.set_title("Async/compressed regimes under measured Lambda "
+                 f"tails — {pareto['verdict']}", color=_INK, loc="left",
+                 fontsize=10)
+    ax.grid(True, color="#e7e6e3", linewidth=0.8, zorder=0)
+    for s in ("top", "right"):
+        ax.spines[s].set_visible(False)
+    for s in ("left", "bottom"):
+        ax.spines[s].set_color("#d7d6d2")
+    ax.tick_params(colors=_INK2, which="both")
+    ax.legend(frameon=False, fontsize=8, ncol=2, labelcolor=_INK)
+    fig.tight_layout()
+    fig.savefig(path, facecolor=_SURFACE)
+    plt.close(fig)
+    return path
+
+
+def _content_hash(payload: dict) -> str:
+    """Hash of the deterministic sections (timings excluded) — the
+    bit-reproducibility receipt the tests re-derive."""
+    det = {k: v for k, v in payload.items() if k != "timings"}
+    blob = json.dumps(det, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def run(csv_rows, *, quick: bool = False, processes=None,
+        json_path: str = "BENCH_comm.json",
+        chart: str = "comm_pareto.png"):
+    payload = {"benchmark": "comm_regimes", "quick": quick, "seed": SEED,
+               "wire": bench_wire(csv_rows)}
+    payload["regimes"] = bench_regimes(csv_rows, quick, processes)
+    pareto = bench_pareto(csv_rows, quick, processes)
+    payload["timings"] = {"pareto_elapsed_s": pareto.pop("elapsed_s")}
+    payload["pareto"] = pareto
+    payload["content_hash"] = _content_hash(payload)
+    csv_rows.append(("comm/_content_hash", payload["content_hash"],
+                     "sha256[:16] of the deterministic payload"))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        csv_rows.append(("comm/_json", 1, json_path))
+    if chart:
+        out = pareto_chart(pareto, chart)
+        csv_rows.append(("comm/_chart", int(out is not None),
+                         out or "matplotlib unavailable"))
+    return csv_rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller grid / fewer replicates (CI)")
+    ap.add_argument("--json", default="BENCH_comm.json")
+    ap.add_argument("--chart", default="comm_pareto.png")
+    ap.add_argument("--processes", type=int, default=None,
+                    help="0/1 inline; default cpu count (<=8)")
+    args = ap.parse_args()
+    rows = []
+    run(rows, quick=args.quick, processes=args.processes,
+        json_path=args.json, chart=args.chart)
+    print("name,value,derived")
+    for name, value, notes in rows:
+        print(f"{name},{value},{str(notes).replace(',', ';')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,7 @@
 Prints ``name,value,derived`` CSV rows.  Usage:
     PYTHONPATH=src python -m benchmarks.run [--only table2|fig23|table3|
         roofline|strategy_matrix|fault_tolerance|sweep|knee|trace|
-        adversarial|serving|recovery|kernels]
+        adversarial|serving|recovery|kernels|comm]
 """
 from __future__ import annotations
 
@@ -17,10 +17,11 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (adversarial_curves, fault_tolerance,
-                            fig23_comm, kernel_bench, pareto_sweep,
-                            recovery_replay, roofline_report,
-                            serving_sweep, strategy_matrix, table2_cost,
+    from benchmarks import (adversarial_curves, comm_regimes,
+                            fault_tolerance, fig23_comm, kernel_bench,
+                            pareto_sweep, recovery_replay,
+                            roofline_report, serving_sweep,
+                            strategy_matrix, table2_cost,
                             table3_convergence, trace_replay)
     suites = {
         "table2": table2_cost.run,
@@ -36,6 +37,7 @@ def main() -> None:
         "serving": serving_sweep.run,
         "recovery": recovery_replay.run,
         "kernels": kernel_bench.run,
+        "comm": comm_regimes.run,
     }
     if args.only:
         suites = {args.only: suites[args.only]}

@@ -1,0 +1,85 @@
+"""Tour of the async / compressed-communication architecture family.
+
+PR 10 registers five beyond-paper variants next to the paper's five —
+all through ``register_arch``, so the paper specs (and the goldens
+pinned to them) are untouched:
+
+  local_sgd        semi-sync: K local steps between barriers, chunked
+                   scatter-reduce exchange, mild staleness tax
+  async_spirt      barrier-free SPIRT: workers commit whenever their
+                   accumulation window closes; staleness is priced as
+                   (1 + penalty * min(W-1, bound)) extra batches
+  async_spirt_q8   async_spirt over the int8 quantized wire
+  scatterreduce_q8 λML ScatterReduce with the int8 payload
+                   (0.25 * (1 + 4/chunk) bytes per gradient byte —
+                   exactly what ``QuantizedScatterReduce`` ships)
+  spirt_sf         SPIRT with MLLess significance filtering (wire bytes
+                   scale with the significant fraction)
+
+The same spec drives the analytic simulator, the vectorized sweeps, the
+discrete-event engine (barrier-free commit path included), trace
+replay, and — through ``jax_strategy`` — real JAX training.  Every
+number below is a pure function of the seeds printed with it.
+
+  PYTHONPATH=src python examples/async_comm_sweep.py
+"""
+from repro.serverless import (EventSweepPoint, FaultPlan, FaultRates,
+                              ServerlessSetup, SweepGrid, get_arch,
+                              lambda_default, run_event_epoch,
+                              simulate_epoch, sweep_analytic,
+                              sweep_events)
+from repro.serverless.faults import Straggler
+
+N_PARAMS = 4_200_000                       # MobileNet
+COMPUTE_S = 0.9
+
+
+def main():
+    # -- staleness is priced, not free ------------------------------------
+    spec = get_arch("async_spirt")
+    print(f"async_spirt: barrier_sync={spec.barrier_sync}, "
+          f"tax = 1 + {spec.staleness_penalty} * "
+          f"min(W-1, {spec.staleness_bound:g}) extra batches")
+    for arch in ("spirt", "async_spirt", "async_spirt_q8", "spirt_sf",
+                 "scatterreduce_q8", "local_sgd"):
+        rep = simulate_epoch(arch, n_params=N_PARAMS,
+                             compute_s_per_batch=COMPUTE_S)
+        print(f"  {arch:17s} {rep.per_worker_s:6.1f}s/epoch  "
+              f"${rep.total_cost:.4f}  "
+              f"{rep.comm_bytes_per_worker / 1e6:8.1f} MB on the wire")
+
+    # -- where asynchrony pays: a straggler stalls barriers, not peers ----
+    kw = dict(n_params=N_PARAMS, compute_s_per_batch=COMPUTE_S,
+              accumulation=2, setup=ServerlessSetup(n_workers=4))
+    slow = FaultPlan(stragglers=(Straggler(worker=1, slowdown=4.0),))
+    for arch in ("spirt", "async_spirt"):
+        clean = run_event_epoch(arch, **kw).makespan_s
+        hurt = run_event_epoch(arch, faults=slow, **kw).makespan_s
+        print(f"straggler overhead {arch:12s} "
+              f"{hurt / clean - 1:+.0%} (clean {clean:.0f}s)")
+
+    # -- the whole family through the vectorized sweep --------------------
+    grid = SweepGrid(n_params=N_PARAMS, compute_s_per_batch=COMPUTE_S,
+                     archs=("spirt", "async_spirt", "scatterreduce",
+                            "scatterreduce_q8"),
+                     n_workers=(4, 16, 64))
+    vec = sweep_analytic(grid)
+    for arch in grid.archs:
+        m = vec.mask(arch)
+        print(f"{arch:17s} sync_s vs W: "
+              + "  ".join(f"{s:6.2f}" for s in vec.sync_s[m]))
+
+    # -- and under the measured Lambda cold-start/straggler tails ---------
+    stats = sweep_events(
+        [EventSweepPoint(arch=a, n_params=N_PARAMS,
+                         compute_s_per_batch=COMPUTE_S, label=a)
+         for a in ("spirt", "async_spirt_q8")],
+        rates=FaultRates(crash_rate=0.2), trace=lambda_default(),
+        n_replicates=4, seed=7, processes=1)
+    for s in stats:
+        print(f"traced {s.point.label:15s} p95 makespan "
+              f"{s.makespan_p95_s:6.1f}s  cost ${s.cost_mean:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,7 @@ paper architectures at import.
 from __future__ import annotations
 
 import ast
+import math
 from typing import Iterable, Optional
 
 from repro.analysis.engine import (AnalysisContext, Finding,
@@ -518,3 +519,69 @@ register_rule(RuleSpec(
              "ships the ~40x-slower interpreter as the production path "
              "and masks Mosaic lowering breakage",
     check=check_kernel_interpret_default))
+
+
+# ---------------------------------------------------------------------------
+# staleness-spec — async ArchSpecs must declare a bounded staleness tax
+# ---------------------------------------------------------------------------
+def _literal_number(node):
+    """Numeric value of a (possibly negated) literal, else None."""
+    neg = False
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        neg, node = True, node.operand
+    if (isinstance(node, ast.Constant)
+            and isinstance(node.value, (int, float))
+            and not isinstance(node.value, bool)):
+        return -node.value if neg else node.value
+    return None
+
+
+_STALENESS_FIELDS = ("staleness_bound", "staleness_penalty")
+
+
+def check_staleness_spec(ctx: AnalysisContext) -> Iterable[Finding]:
+    for rel, mod in sorted(ctx.modules.items()):
+        if mod.parts[0] == "tests" or mod.basename.startswith("test_"):
+            continue        # tests probe the runtime validation itself
+        for call, qual in mod.walk_calls():
+            if not qual or qual.rsplit(".", 1)[-1] != "ArchSpec":
+                continue
+            kws = {kw.arg: kw.value for kw in call.keywords if kw.arg}
+            bs = kws.get("barrier_sync")
+            if not (isinstance(bs, ast.Constant) and bs.value is False):
+                continue    # barrier-synchronous: no staleness model
+            for field in _STALENESS_FIELDS:
+                node = kws.get(field)
+                if node is None:
+                    yield Finding(
+                        mod.rel, call.lineno, "staleness-spec",
+                        f"barrier-free ArchSpec declares no {field}: "
+                        "an async architecture without a bounded "
+                        "staleness penalty simulates free asynchrony "
+                        "(stragglers stop hurting but convergence "
+                        "never pays)")
+                    continue
+                val = _literal_number(node)
+                if val is None:
+                    continue    # computed: __post_init__ decides at runtime
+                if not (val > 0 and math.isfinite(val)):
+                    yield Finding(
+                        mod.rel, node.lineno, "staleness-spec",
+                        f"barrier-free ArchSpec sets {field}={val!r}; "
+                        "it must be a finite positive value — zero or "
+                        "infinite staleness terms disable the "
+                        "convergence tax entirely")
+
+
+register_rule(RuleSpec(
+    rule_id="staleness-spec",
+    description="barrier-free (async) ArchSpecs declare a finite "
+                "positive staleness_bound and staleness_penalty",
+    contract="the async round-term model prices asynchrony: stragglers "
+             "stop stalling the fleet ONLY because convergence pays "
+             "(1 + penalty * min(staleness, bound)) extra work; a "
+             "registration with barrier_sync=False and no bounded "
+             "penalty would sweep as a free lunch and dominate every "
+             "Pareto front for the wrong reason (archs.ArchSpec."
+             "__post_init__ is the runtime twin of this check)",
+    check=check_staleness_spec))

@@ -47,7 +47,19 @@ class QuantizedScatterReduce(Strategy):
                             grads_like)
 
     def sync(self, grads, state, axis_names):
-        axes = (axis_names,) if isinstance(axis_names, str) else axis_names
+        # normalize to a tuple once and hand the SAME normalized axes
+        # to every collective: W (the row count of the scatter layout)
+        # and the all_to_all/all_gather device ordering must agree, or
+        # chunks reassemble permuted.  jax collectives accept a tuple
+        # of mesh axis names and treat it as the combined axis, so a
+        # multi-axis data mesh (e.g. ("data", "fsdp")) reduces over the
+        # full product — pinned by the 4-device parity test.
+        axes = (axis_names,) if isinstance(axis_names, str) \
+            else tuple(axis_names)
+        if not axes:
+            raise ValueError("QuantizedScatterReduce.sync needs at "
+                             "least one mesh axis name")
+        axis_names = axes if len(axes) > 1 else axes[0]
         from repro.compat import axis_size as _axis_size
         W = int(np.prod([_axis_size(a) for a in axes]))
 

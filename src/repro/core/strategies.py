@@ -170,14 +170,24 @@ class MLLess(Strategy):
     name: str = "mlless"
     threshold: float = 0.5
     block: int = 256
-    use_kernel: bool = False
+    # None -> auto-detect like recovery.py's robust statistics: the
+    # Pallas block_significance kernel on TPU (where Mosaic lowers it
+    # natively), the bit-exact inline jnp path everywhere else
+    use_kernel: Optional[bool] = None
+
+    def _kernel_enabled(self) -> bool:
+        if self.use_kernel is not None:
+            return self.use_kernel
+        from repro.kernels import ops as kops
+        return not kops.default_interpret()
 
     def init_state(self, grads_like):
         return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
                             grads_like)
 
     def sync(self, grads, state, axis_names):
-        if self.use_kernel:
+        use_kernel = self._kernel_enabled()
+        if use_kernel:
             from repro.kernels import ops as kops
         sig_count = jnp.zeros((), jnp.float32)
         tot_count = jnp.zeros((), jnp.float32)
@@ -189,7 +199,7 @@ class MLLess(Strategy):
             pad = (-flat.shape[0]) % self.block
             flat = jnp.pad(flat, (0, pad))
             blocks = flat.reshape(-1, self.block)
-            if self.use_kernel:
+            if use_kernel:
                 mask = kops.block_significance(blocks, self.threshold)
             else:
                 bn = jnp.sqrt(jnp.sum(blocks * blocks, axis=1))

@@ -73,8 +73,8 @@ def masked_filter(blocks, mask, *, tile_rows=256, interpret=None):
                   pl.BlockSpec((tile_rows, 1), lambda i: (i, 0))],
         out_specs=[pl.BlockSpec((tile_rows, b), lambda i: (i, 0)),
                    pl.BlockSpec((tile_rows, b), lambda i: (i, 0))],
-        out_shape=[jax.ShapeDtypeStruct((np_, b), jnp.float32),
-                   jax.ShapeDtypeStruct((np_, b), jnp.float32)],
+        out_shape=[jax.ShapeDtypeStruct((np_, b), blocks.dtype),
+                   jax.ShapeDtypeStruct((np_, b), blocks.dtype)],
         interpret=interpret,
     )(blocks, m2)
     return kept[:n], resid[:n]

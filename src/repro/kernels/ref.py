@@ -32,9 +32,11 @@ def block_norms(blocks):
 
 
 def masked_filter(blocks, mask):
+    # filter in fp32, emit in the input dtype: a bf16 gradient must
+    # come back as bf16 (its wire-byte accounting depends on it)
     bf = blocks.astype(jnp.float32)
     kept = bf * mask[:, None].astype(jnp.float32)
-    return kept, bf - kept
+    return kept.astype(blocks.dtype), (bf - kept).astype(blocks.dtype)
 
 
 def block_significance(blocks, threshold):

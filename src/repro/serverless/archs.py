@@ -45,6 +45,16 @@ benchmarks:
   spirt_s3    SPIRT semantics with the gradient path pinned to S3,
               isolating the Redis premium from the algorithm.
 
+A further family of asynchronous / semi-sync / compressed variants
+(``local_sgd``, ``async_spirt``, ``async_spirt_q8``,
+``scatterreduce_q8``, ``spirt_sf``) registers at the bottom of this
+module: ``barrier_sync=False`` switches the event runtime to
+barrier-free per-worker commits under a bounded-staleness convergence
+tax, and ``compression`` scales the wire bytes through
+:data:`COMPRESSION_SCHEMES` (int8 quantization per
+``QuantizedScatterReduce``, MLLess significance filtering).  See
+``examples/async_comm_sweep.py``.
+
 See ``examples/custom_arch.py`` for registering a third-party
 architecture in ~20 lines.  This module stays import-light (numpy +
 pricing only — no jax), so analytic sweeps never pay accelerator
@@ -53,6 +63,7 @@ import costs; ``ArchSpec.make_strategy`` lazy-imports the JAX side.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
@@ -89,6 +100,36 @@ REDIS = Channel("redis")
 
 def _grad_bytes(n_params: int, dtype_bytes: int = 4) -> float:
     return n_params * dtype_bytes
+
+
+# ---------------------------------------------------------------------------
+# Wire compression schemes
+# ---------------------------------------------------------------------------
+# Mirrors repro.core.compression.QuantizedScatterReduce.chunk — the wire
+# factor below must stay in lock-step with that strategy's comm_bytes.
+_Q8_CHUNK = 512
+
+
+def _int8_wire_scale(significant_fraction):
+    # int8 payload plus one fp32 scale per chunk: the exact per-byte
+    # factor QuantizedScatterReduce.comm_bytes charges.  The *update*
+    # path shrinks by the same factor because the aggregate is
+    # requantized before the all-gather — the update IS int8 + scales.
+    return 0.25 * (1.0 + 4.0 / _Q8_CHUNK)
+
+
+def _significance_wire_scale(significant_fraction):
+    # MLLess semantics: only the significant fraction of the gradient
+    # crosses the wire (error feedback keeps the rest local).  Only
+    # meaningful for archs whose update path is in-DB (update_bytes=0);
+    # a dense model pull would not be filtered.
+    return significant_fraction
+
+
+COMPRESSION_SCHEMES: Dict[str, Callable[[Any], Any]] = {
+    "int8": _int8_wire_scale,
+    "significance": _significance_wire_scale,
+}
 
 
 # ---------------------------------------------------------------------------
@@ -160,6 +201,25 @@ class ArchSpec:
     # benchmarks/adversarial_curves.py draws each architecture's
     # byzantine-fraction degradation curve under this statistic.
     default_aggregator: str = "mean"
+    # --- asynchrony ---------------------------------------------------
+    # barrier_sync=False makes the event runtime commit each worker's
+    # sync immediately instead of waiting at the round barrier:
+    # stragglers no longer stall the fleet, but convergence pays a
+    # staleness tax.  Async specs MUST declare a bounded staleness model
+    # (the `staleness-spec` lint rule pins this statically, the
+    # validation below pins it at runtime): the effective staleness —
+    # (W - 1) concurrent unsynced peers for barrier-free specs,
+    # (accumulation - 1) deferred local steps for semi-sync ones — is
+    # capped at `staleness_bound`, and the work to converge inflates by
+    # (1 + staleness_penalty * min(staleness, staleness_bound)),
+    # modeled like the accumulation-fraction axis: folded into the
+    # per-round terms so round counts stay integral.
+    barrier_sync: bool = True
+    staleness_bound: float = 0.0
+    staleness_penalty: float = 0.0
+    # optional wire-compression scheme applied to the gradient bytes G
+    # before the round terms are computed — a COMPRESSION_SCHEMES key
+    compression: Optional[str] = None
 
     def __post_init__(self):
         if self.default_recovery not in ("restore", "takeover"):
@@ -173,6 +233,28 @@ class ArchSpec:
                 f"arch {self.name!r}: default_aggregator must be one "
                 f"of {', '.join(SIM_AGGREGATORS)}, got "
                 f"{self.default_aggregator!r}")
+        if self.staleness_bound < 0 or self.staleness_penalty < 0:
+            raise ValueError(
+                f"arch {self.name!r}: staleness_bound/staleness_penalty "
+                "must be non-negative")
+        if not self.barrier_sync:
+            if not (self.staleness_bound > 0
+                    and math.isfinite(self.staleness_bound)):
+                raise ValueError(
+                    f"arch {self.name!r}: barrier-free (async) specs "
+                    "must declare a finite positive staleness_bound, "
+                    f"got {self.staleness_bound!r}")
+            if not self.staleness_penalty > 0:
+                raise ValueError(
+                    f"arch {self.name!r}: barrier-free (async) specs "
+                    "must declare a positive staleness_penalty, got "
+                    f"{self.staleness_penalty!r}")
+        if (self.compression is not None
+                and self.compression not in COMPRESSION_SCHEMES):
+            raise ValueError(
+                f"arch {self.name!r}: unknown compression "
+                f"{self.compression!r}; registered: "
+                f"{', '.join(COMPRESSION_SCHEMES)}")
 
     def pins_channel(self, channel: Channel) -> bool:
         """True when the configured ``channel`` is overridden by this
@@ -265,13 +347,32 @@ def arch_round_terms(arch, *, n_params, n_workers, bandwidth_Bps,
         sync_lat = spec.sync_channel.latency_s
     else:
         sync_bw, sync_lat = bandwidth_Bps, latency_s
+    G = _grad_bytes(n_params)
+    if spec.compression is not None:
+        # wire compression shrinks the gradient bytes every stage moves
+        # (the schemes are only paired with term fns whose update path
+        # is either in-DB or itself compressed — see the scheme notes)
+        G = G * COMPRESSION_SCHEMES[spec.compression](significant_fraction)
     terms = spec.round_terms(
-        G=_grad_bytes(n_params), W=n_workers,
+        G=G, W=n_workers,
         bw=bandwidth_Bps, lat=latency_s,
         sync_bw=sync_bw, sync_lat=sync_lat,
         nb=batches_per_worker,
         significant_fraction=significant_fraction,
         accumulation=accumulation)
+    if spec.staleness_penalty:
+        # converging under staleness needs `factor`x the gradient work;
+        # fold it into the per-round terms (keeping n_rounds integral so
+        # the scalar and vectorized paths stay bit-exact) — the state
+        # reload amortizes, so the tax lands on compute and comm
+        staleness = (n_workers - 1.0) if not spec.barrier_sync \
+            else (accumulation - 1.0)
+        factor = 1.0 + spec.staleness_penalty \
+            * np.minimum(staleness, spec.staleness_bound)
+        for key in ("batches_per_round", "sync_s", "update_s",
+                    "sync_bytes", "update_bytes"):
+            terms[key] = terms[key] * factor
+    terms["barrier"] = spec.barrier_sync
     # every invocation of a stateless worker reloads model + minibatch;
     # stateful archs pay it once (fetch_first_round_only)
     terms["fetch_s"] = _transfer(model_bytes + minibatch_bytes,
@@ -449,4 +550,104 @@ register_arch(ArchSpec(
     default_recovery="takeover",           # state lives in S3 instead
     default_aggregator="trimmed_mean",     # in-DB robust statistic
     jax_strategy="spirt", jax_strategy_kwargs=(("microbatches", 4),),
+    anchor="spirt"))
+
+
+# ---------------------------------------------------------------------------
+# Asynchronous / semi-sync / compressed-communication architectures.
+# Registered here and NOWHERE else (the PR 4 extension rule): the paper
+# specs above are pinned bit-exactly by tests/golden/, so the missing
+# axis of the cost-performance analysis — staleness-tolerant peer
+# updates (SPIRT's in-DB lineage, arXiv 2309.14148) and compressed
+# wire bytes (arXiv 2105.07806's communication-dominates result) —
+# enters purely additively.
+# ---------------------------------------------------------------------------
+def _async_spirt_terms(*, G, W, bw, lat, sync_bw, sync_lat, nb,
+                       significant_fraction, accumulation):
+    # barrier-free SPIRT: accumulate like SPIRT, but instead of the
+    # (W-1)-wide cross-worker exchange + queue polls, each worker
+    # pushes its accumulated gradient to the shared store and pulls the
+    # merged state whenever it arrives — O(1) in W.  Dropping the
+    # (W-1) term is the whole speedup; the dispatcher's staleness
+    # factor is the price.
+    invocations = np.maximum(1, nb // accumulation)
+    bpr = nb / invocations
+    return dict(n_rounds=invocations, batches_per_round=bpr,
+                sync_s=bpr * _transfer(G, sync_bw, sync_lat, ops=1)
+                + _transfer(G, sync_bw, sync_lat, ops=2),
+                update_s=_transfer(0, sync_bw, sync_lat, ops=1),  # in-db
+                sync_bytes=bpr * G + G,
+                update_bytes=0 * G)
+
+
+def _local_sgd_terms(*, G, W, bw, lat, sync_bw, sync_lat, nb,
+                     significant_fraction, accumulation):
+    # semi-sync local SGD: `accumulation` local steps between barriers,
+    # each barrier a ScatterReduce-style chunk exchange of the
+    # accumulated model delta (same wire pattern as scatterreduce, but
+    # amortized over the sync period)
+    invocations = np.maximum(1, nb // accumulation)
+    bpr = nb / invocations
+    chunk = G / W
+    per_sync = (_transfer((W - 1) * chunk, sync_bw, sync_lat,
+                          ops=W - 1) * 2
+                + _transfer(chunk, sync_bw, sync_lat, ops=1)
+                + _transfer((W - 1) * chunk, sync_bw, sync_lat,
+                            ops=W - 1))
+    return dict(n_rounds=invocations, batches_per_round=bpr,
+                sync_s=per_sync,
+                update_s=_transfer(G, sync_bw, sync_lat, ops=1),
+                sync_bytes=(W - 1) * chunk * 2 + chunk + (W - 1) * chunk,
+                update_bytes=1.0 * G)
+
+
+register_arch(ArchSpec(
+    name="local_sgd", round_terms=_local_sgd_terms,
+    description="semi-sync local SGD: accumulation local steps per "
+                "barrier, chunked delta exchange at each barrier; the "
+                "deferred steps pay the staleness tax",
+    staleness_penalty=0.004, staleness_bound=16.0,
+    jax_strategy="spirt", jax_strategy_kwargs=(("microbatches", 4),),
+    anchor="scatterreduce"))
+
+register_arch(ArchSpec(
+    name="async_spirt", round_terms=_async_spirt_terms,
+    barrier_sync=False, staleness_bound=8.0, staleness_penalty=0.02,
+    description="barrier-free SPIRT: workers push/pull the shared "
+                "in-DB state without waiting for peers; bounded "
+                "staleness, stragglers never stall the fleet",
+    default_recovery="takeover",           # state lives in the DB
+    default_aggregator="trimmed_mean",     # in-DB robust statistic
+    jax_strategy="spirt", jax_strategy_kwargs=(("microbatches", 4),),
+    anchor="spirt"))
+
+register_arch(ArchSpec(
+    name="async_spirt_q8", round_terms=_async_spirt_terms,
+    barrier_sync=False, staleness_bound=8.0, staleness_penalty=0.02,
+    compression="int8",
+    description="async SPIRT with int8-quantized pushes (wire bytes "
+                "follow QuantizedScatterReduce's payload factor)",
+    default_recovery="takeover",
+    default_aggregator="trimmed_mean",
+    jax_strategy="quantized_scatterreduce",
+    anchor="spirt"))
+
+register_arch(ArchSpec(
+    name="scatterreduce_q8", round_terms=_scatterreduce_terms,
+    compression="int8",
+    description="ScatterReduce with int8-quantized chunk exchange + "
+                "error feedback (realized by QuantizedScatterReduce "
+                "on real hardware)",
+    jax_strategy="quantized_scatterreduce",
+    anchor="scatterreduce"))
+
+register_arch(ArchSpec(
+    name="spirt_sf", round_terms=_spirt_terms,
+    compression="significance",
+    description="SPIRT with MLLess-style significance filtering on "
+                "the gradient path (error feedback preserves "
+                "convergence; update stays in-DB)",
+    default_recovery="takeover",
+    default_aggregator="trimmed_mean",
+    jax_strategy="mlless", jax_strategy_kwargs=(("threshold", 0.7),),
     anchor="spirt"))

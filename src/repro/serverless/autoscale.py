@@ -79,10 +79,14 @@ class ReactiveAutoscaler:
                 and active_workers < self.max_workers
                 and rounds_left >= 2):
             self._last_scale_round = round_idx
-            self.decisions.append((round_idx, self.step,
+            # log the APPLIED delta, not the configured step: near the
+            # fleet cap the clamp below bites, and a replayed decision
+            # log must match the scale events that actually happened
+            applied = min(self.step, self.max_workers - active_workers)
+            self.decisions.append((round_idx, applied,
                                    f"slow round {round_s:.2f}s vs ref "
                                    f"{ref:.2f}s"))
-            return min(self.step, self.max_workers - active_workers)
+            return applied
         # scale IN: fewer workers would still finish in the same number
         # of rounds (tail of the pool)
         smaller = active_workers - self.step

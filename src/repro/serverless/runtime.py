@@ -117,6 +117,7 @@ class _Worker:
     __slots__ = ("id", "state", "gen", "alive", "spawn_time", "done_time",
                  "joined", "work_mult", "replay_rounds", "byzantine",
                  "restoring", "initial", "pending_recovery",
+                 "async_reserve",
                  "s_cold", "s_fetch", "s_compute", "s_sync", "s_update",
                  "s_wait", "s_replay", "_stage_started")
 
@@ -134,6 +135,7 @@ class _Worker:
         self.restoring = False       # crashed, checkpoint-restore in flight
         self.initial = False         # part of the epoch-start fleet
         self.pending_recovery: Optional[RecoveryEvent] = None
+        self.async_reserve = 0.0     # in-flight pool claim (barrier-free)
         # per-stage busy-time accounting (excludes barrier waits)
         self.s_cold = 0.0
         self.s_fetch = 0.0
@@ -206,6 +208,14 @@ class EventRuntime:
         self.pool = plan.n_workers * plan.total_batches
         self.arrived: set = set()
         self.barrier_not_before = 0.0
+        # barrier-free plans: committed syncs since the last
+        # fleet-equivalent round tick (n_workers commits ~ one round)
+        self._async_syncs = 0
+        # barrier-free mode: pool batches claimed by in-flight rounds —
+        # a worker may only start a round against pool MINUS what its
+        # peers have already claimed, or cold-start spread lets fast
+        # workers overdraft the epoch with phantom rounds
+        self._async_reserved = 0.0
         self.recoveries: List[RecoveryEvent] = []
         self.scale_events: List[Tuple[float, int]] = []
         self.timeline: List[Tuple[float, int, str]] = []
@@ -253,6 +263,13 @@ class EventRuntime:
         cold = self.plan.cold_start_s + self.faults.cold_extra(w.id)
         if w.id in self._storm_victims:
             cold += self.faults.storm.extra_s
+        if not self.plan.barrier:
+            # claim the first round's quantum at invocation: a peer
+            # finishing early must not overdraft the pool share of a
+            # worker still paying its cold start
+            self._async_reserved -= w.async_reserve
+            w.async_reserve = self.plan.batches_per_round * w.work_mult
+            self._async_reserved += w.async_reserve
         if self._tl:
             self._log(w.id, f"invoke(cold={cold:.2f}s)")
         w.state = COLD_START
@@ -285,7 +302,12 @@ class EventRuntime:
         self._begin_compute(w)
 
     def _round_fetch_needed(self) -> bool:
-        return (not self.plan.fetch_first_round_only) and self.round_idx > 0
+        if self.plan.fetch_first_round_only:
+            return False
+        # barrier mode only reaches _begin_round again after round 0's
+        # barrier (round_idx >= 1); a barrier-free worker re-fetches at
+        # the top of every self-paced round
+        return self.round_idx > 0 or not self.plan.barrier
 
     def _begin_round(self, w: _Worker):
         """Top of a round for an already-joined worker."""
@@ -301,6 +323,14 @@ class EventRuntime:
         self._begin_compute(w)
 
     def _begin_compute(self, w: _Worker):
+        if not self.plan.barrier:
+            # claim this round's quantum up front (released at commit,
+            # or at crash for a round that will never commit); the
+            # re-subtract makes the claim idempotent across the
+            # fetch -> compute hand-off
+            self._async_reserved -= w.async_reserve
+            w.async_reserve = self.plan.batches_per_round * w.work_mult
+            self._async_reserved += w.async_reserve
         w.state = COMPUTE
         w._stage_started = self.t
         slow = self.faults.slowdown(w.id, self.t)
@@ -322,6 +352,9 @@ class EventRuntime:
 
     def _h_synced(self, w: _Worker, arg):
         w.s_sync += self.t - w._stage_started
+        if not self.plan.barrier:
+            self._commit_async_sync(w)
+            return
         w.state = WAIT_BARRIER
         w._stage_started = self.t
         if w.pending_recovery is not None:
@@ -331,6 +364,43 @@ class EventRuntime:
             w.restoring = False
         self.arrived.add(w.id)
         self._maybe_release_barrier()
+
+    def _commit_async_sync(self, w: _Worker):
+        """Barrier-free commit: the worker's push lands in the shared
+        store immediately — no WAIT_BARRIER state, no fleet stall.  The
+        pool drains per commit (instead of per barrier round), and
+        every ``n_workers`` commits count as one fleet-equivalent round
+        for reporting and autoscaler pacing."""
+        if w.pending_recovery is not None:
+            # first committed sync after the respawn: recovery complete
+            w.pending_recovery.rejoined_time_s = self.t
+            w.pending_recovery = None
+            w.restoring = False
+        if self._has_byz and w.byzantine:
+            # the in-DB aggregate masks this worker's contribution only
+            # when the robust statistic is feasible over the live fleet
+            # (same feasibility rule as the barrier path)
+            expected = self._expected()
+            n_byz = sum(1 for v in expected if v.byzantine)
+            if len(expected) > 2 * self.robust_trim \
+                    and n_byz <= self.robust_trim:
+                self.masked += 1
+            else:
+                self.poisoned += 1
+        # drain exactly what this round claimed at its start (work_mult
+        # changes from a mid-round takeover apply from the next round)
+        self.pool -= w.async_reserve
+        self._async_reserved -= w.async_reserve
+        w.async_reserve = 0.0
+        self._async_syncs += 1
+        if self._async_syncs % self.plan.n_workers == 0:
+            self.round_idx += 1
+            if self._tl:
+                self._log(-1, f"async round={self.round_idx} "
+                              f"commits={self._async_syncs}")
+            if self.autoscaler is not None:
+                self._autoscale_hook()
+        self._begin_update(w)
 
     # ------------------------------------------------------------ barrier
     def _expected(self) -> List[_Worker]:
@@ -516,7 +586,11 @@ class EventRuntime:
 
     def _h_updated(self, w: _Worker, arg):
         w.s_update += self.t - w._stage_started
-        if self.pool > 1e-9 and not self._retire_if_requested(w):
+        # barrier-free: only unclaimed pool work justifies another round
+        # (peers' in-flight rounds will drain their reservations);
+        # barrier mode keeps reservations at zero so this is unchanged
+        if (self.pool - self._async_reserved > 1e-9
+                and not self._retire_if_requested(w)):
             self._begin_round(w)
         elif w.alive and w.done_time is None:
             w.state = DONE
@@ -545,6 +619,10 @@ class EventRuntime:
         w.gen += 1                      # invalidate in-flight events
         w.alive = False
         w.state = DEAD
+        # barrier-free pool claims survive a restore crash (the worker
+        # respawns and commits the round); takeover settles the claim
+        # from the in-DB partition below
+        reserve = w.async_reserve
         self.arrived.discard(w.id)
         if self._tl:
             self._log(w.id, "CRASH")
@@ -563,6 +641,16 @@ class EventRuntime:
                 for v in survivors:
                     v.work_mult += extra
                 self._uniform = False
+                if reserve:
+                    # barrier-free takeover mirrors the barrier
+                    # engine's economics: the dead worker's partial
+                    # accumulation is already in the DB, so its claimed
+                    # round drains without recompute (the sync engine
+                    # commits it through the inflated work_mult at the
+                    # crash round's barrier)
+                    self.pool -= reserve
+                    self._async_reserved -= reserve
+                    w.async_reserve = 0.0
             self.barrier_not_before = max(self.barrier_not_before, rejoin)
             self.recoveries.append(RecoveryEvent(
                 worker=w.id, crash_time_s=t, rejoined_time_s=rejoin,

@@ -129,6 +129,8 @@ class RoundPlan:
     ram_gb: float
     sync_bytes: float = 0.0       # exact per-worker wire bytes per round
     update_bytes: float = 0.0     # (sum of the transfer() nbytes terms)
+    barrier: bool = True          # False: workers commit syncs without
+                                  # waiting for peers (async archs)
 
     @property
     def total_batches(self) -> float:
@@ -174,7 +176,8 @@ def round_plan(arch: str, *, n_params: int, compute_s_per_batch: float,
                      sync_s=float(terms["sync_s"]),
                      update_s=float(terms["update_s"]),
                      sync_bytes=float(terms["sync_bytes"]),
-                     update_bytes=float(terms["update_bytes"]))
+                     update_bytes=float(terms["update_bytes"]),
+                     barrier=bool(terms.get("barrier", True)))
 
 
 def _epoch_terms(*, n_rounds, batches_per_round, fetch_s,

@@ -1,0 +1,42 @@
+"""Fixture: barrier-free ArchSpecs registered without a priced
+staleness model — each call violates staleness-spec exactly once."""
+from repro.serverless.archs import ArchSpec, register_arch
+
+
+def _terms(**kw):
+    return {}
+
+
+# missing staleness_bound (finding anchors at the call line)
+register_arch(ArchSpec(
+    name="free_lunch_async",
+    round_terms=_terms,
+    barrier_sync=False,
+    staleness_penalty=0.02,
+))
+
+# missing staleness_penalty
+register_arch(ArchSpec(
+    name="taxless_async",
+    round_terms=_terms,
+    barrier_sync=False,
+    staleness_bound=8.0,
+))
+
+# bound present but infinite: unbounded staleness
+register_arch(ArchSpec(
+    name="unbounded_async",
+    round_terms=_terms,
+    barrier_sync=False,
+    staleness_bound=1e400,
+    staleness_penalty=0.02,
+))
+
+# penalty present but zero: the tax is disabled
+register_arch(ArchSpec(
+    name="zero_tax_async",
+    round_terms=_terms,
+    barrier_sync=False,
+    staleness_bound=8.0,
+    staleness_penalty=0.0,
+))

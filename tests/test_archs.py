@@ -83,7 +83,13 @@ def test_every_spec_roundtrips_plan_to_event_runtime(arch):
     assert rep.makespan_s == pytest.approx(ana.per_worker_s, rel=1e-9)
     assert rep.total_cost == pytest.approx(ana.total_cost, rel=1e-9)
     plan = round_plan(arch, n_params=N_PARAMS, compute_s_per_batch=0.9)
-    assert plan.n_rounds >= 1 and plan.total_batches == 24
+    assert plan.n_rounds >= 1
+    if get_arch(arch).staleness_penalty:
+        # staleness-taxed archs converge with strictly MORE work than
+        # the nominal epoch — that is the convergence penalty
+        assert plan.total_batches > 24
+    else:
+        assert plan.total_batches == 24
 
 
 @pytest.mark.parametrize("arch", list_archs())
@@ -222,7 +228,14 @@ def test_spec_names_jax_strategy():
                                        ("allreduce", "parameter_server"),
                                        ("gpu", "allreduce"),
                                        ("hier_spirt", "spirt"),
-                                       ("spirt_s3", "spirt")])
+                                       ("spirt_s3", "spirt"),
+                                       ("local_sgd", "spirt"),
+                                       ("async_spirt", "spirt"),
+                                       ("async_spirt_q8",
+                                        "quantized_scatterreduce"),
+                                       ("scatterreduce_q8",
+                                        "quantized_scatterreduce"),
+                                       ("spirt_sf", "mlless")])
 def test_make_strategy_works_for_every_shipped_spec(arch, want):
     """Specs whose jax_strategy shares the arch name (spirt, mlless,
     scatterreduce back concrete STRATEGIES entries) must build fine —

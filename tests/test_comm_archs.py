@@ -1,0 +1,268 @@
+"""ISSUE 10: asynchronous / semi-sync / compressed-communication
+architectures.  The specs register ONLY through ``register_arch``
+(paper specs and goldens untouched); these tests pin the staleness
+model, the compressed wire bytes, the barrier-free event-runtime path,
+and the flow through the sweep machinery.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.serverless import (ARCHS, EventSweepPoint, FaultPlan,
+                              FaultRates, ServerlessSetup, SweepGrid,
+                              get_arch, list_archs, run_event_epoch,
+                              simulate_epoch, sweep_analytic,
+                              sweep_events)
+from repro.serverless.archs import (COMPRESSION_SCHEMES, ArchSpec,
+                                    _spirt_terms)
+from repro.serverless.faults import (ByzantineWorker, Straggler,
+                                     WorkerCrash)
+from repro.serverless.simulator import round_plan
+from repro.serverless.sweep import scalar_sweep
+from repro.serverless.traces import lambda_default
+
+N_PARAMS = int(4.2e6)
+COMP = 0.9
+NEW_ARCHS = ("local_sgd", "async_spirt", "async_spirt_q8",
+             "scatterreduce_q8", "spirt_sf")
+
+
+# ---------------------------------------------------------------------------
+# registry + spec validation
+# ---------------------------------------------------------------------------
+def test_new_archs_registered_after_paper_five():
+    names = list_archs()
+    assert names[:5] == ARCHS
+    for a in NEW_ARCHS:
+        assert a in names and not get_arch(a).paper
+
+
+def test_async_spec_requires_bounded_staleness():
+    base = get_arch("async_spirt")
+    with pytest.raises(ValueError, match="staleness_bound"):
+        dataclasses.replace(base, name="_bad", staleness_bound=0.0)
+    with pytest.raises(ValueError, match="staleness_bound"):
+        dataclasses.replace(base, name="_bad",
+                            staleness_bound=float("inf"))
+    with pytest.raises(ValueError, match="staleness_penalty"):
+        dataclasses.replace(base, name="_bad", staleness_penalty=0.0)
+    with pytest.raises(ValueError, match="non-negative"):
+        dataclasses.replace(base, name="_bad", staleness_penalty=-0.1)
+
+
+def test_unknown_compression_scheme_rejected():
+    with pytest.raises(ValueError, match="unknown compression"):
+        ArchSpec(name="_bad", round_terms=_spirt_terms,
+                 compression="fp8")
+    assert set(COMPRESSION_SCHEMES) == {"int8", "significance"}
+
+
+def test_paper_specs_carry_no_async_or_compression_fields():
+    """Goldens depend on the paper five never entering the new code
+    paths — their arithmetic must be provably untouched."""
+    for a in ARCHS:
+        spec = get_arch(a)
+        assert spec.barrier_sync and spec.compression is None
+        assert spec.staleness_penalty == 0.0
+
+
+# ---------------------------------------------------------------------------
+# staleness model
+# ---------------------------------------------------------------------------
+def test_staleness_tax_inflates_work_not_rounds():
+    plain = round_plan("spirt", n_params=N_PARAMS,
+                       compute_s_per_batch=COMP)
+    taxed = round_plan("async_spirt", n_params=N_PARAMS,
+                       compute_s_per_batch=COMP)
+    assert taxed.n_rounds == plain.n_rounds          # integral, untouched
+    spec = get_arch("async_spirt")
+    W = ServerlessSetup().n_workers
+    factor = 1.0 + spec.staleness_penalty * min(W - 1,
+                                                spec.staleness_bound)
+    assert taxed.batches_per_round == pytest.approx(
+        plain.batches_per_round * factor)
+    assert taxed.sync_bytes > 0
+
+
+def test_staleness_capped_at_bound():
+    """Past the bound, growing the fleet must not grow the tax."""
+    spec = get_arch("async_spirt")
+    def batches(W):
+        return round_plan("async_spirt", n_params=N_PARAMS,
+                          compute_s_per_batch=COMP,
+                          setup=ServerlessSetup(n_workers=W)
+                          ).batches_per_round
+    wide, wider = batches(16), batches(64)
+    assert wide == wider                 # both capped at staleness_bound
+    assert batches(2) < wide             # below the bound the tax grows
+
+
+def test_async_sync_is_o1_in_fleet_size():
+    """The point of going barrier-free: SPIRT's (W-1) cross-worker
+    fan-in disappears, so at scale the async variant syncs cheaper even
+    after the staleness tax."""
+    def sync(arch, W):
+        return simulate_epoch(
+            arch, n_params=N_PARAMS, compute_s_per_batch=COMP,
+            setup=ServerlessSetup(n_workers=W)).stages.sync
+    assert sync("async_spirt", 16) < sync("spirt", 16)
+    assert sync("async_spirt", 64) < 0.25 * sync("spirt", 64)
+
+
+# ---------------------------------------------------------------------------
+# compressed wire bytes
+# ---------------------------------------------------------------------------
+def test_int8_wire_scale_matches_quantized_scatterreduce():
+    """The analytic scheme and the real strategy must bill the same
+    bytes-per-gradient-byte, or the sweeps lie about the hardware."""
+    a = simulate_epoch("scatterreduce_q8", n_params=N_PARAMS,
+                       compute_s_per_batch=COMP)
+    b = simulate_epoch("scatterreduce", n_params=N_PARAMS,
+                       compute_s_per_batch=COMP)
+    ratio = a.comm_bytes_per_worker / b.comm_bytes_per_worker
+    assert ratio == pytest.approx(0.25 * (1 + 4.0 / 512))
+
+
+def test_significance_wire_scale_tracks_fraction():
+    def comm(sf):
+        return simulate_epoch("spirt_sf", n_params=N_PARAMS,
+                              compute_s_per_batch=COMP,
+                              significant_fraction=sf
+                              ).comm_bytes_per_worker
+    dense = simulate_epoch("spirt", n_params=N_PARAMS,
+                           compute_s_per_batch=COMP).comm_bytes_per_worker
+    for sf in (0.1, 0.3, 0.9):
+        assert comm(sf) / dense == pytest.approx(sf)
+
+
+def test_compression_shrinks_sync_time_and_cost():
+    for comp_arch, dense_arch in (("scatterreduce_q8", "scatterreduce"),
+                                  ("spirt_sf", "spirt"),
+                                  ("async_spirt_q8", "async_spirt")):
+        a = simulate_epoch(comp_arch, n_params=N_PARAMS,
+                           compute_s_per_batch=COMP)
+        b = simulate_epoch(dense_arch, n_params=N_PARAMS,
+                           compute_s_per_batch=COMP)
+        assert a.stages.sync < b.stages.sync, comp_arch
+
+
+# ---------------------------------------------------------------------------
+# vectorized sweep bit-exactness (the elementwise contract)
+# ---------------------------------------------------------------------------
+def test_new_archs_vectorized_matches_scalar():
+    grid = SweepGrid(n_params=N_PARAMS, compute_s_per_batch=COMP,
+                     archs=NEW_ARCHS, n_workers=(2, 4, 16),
+                     accumulation=(8, 24))
+    vec = sweep_analytic(grid)
+    for i, rep in enumerate(scalar_sweep(grid)):
+        assert vec.per_worker_s[i] == rep.per_worker_s, i
+        assert vec.total_cost[i] == rep.total_cost, i
+
+
+# ---------------------------------------------------------------------------
+# barrier-free event runtime
+# ---------------------------------------------------------------------------
+def test_async_plan_is_barrier_free():
+    assert not round_plan("async_spirt", n_params=N_PARAMS,
+                          compute_s_per_batch=COMP).barrier
+    assert round_plan("local_sgd", n_params=N_PARAMS,
+                      compute_s_per_batch=COMP).barrier
+
+
+def test_async_straggler_hurts_less_than_sync():
+    """A straggler stalls a barrier fleet for the whole epoch; async
+    peers just keep committing — the makespan overhead ratio must be
+    strictly smaller for the barrier-free arch."""
+    # accumulation=2 -> 12 self-paced rounds per worker; with a single
+    # round the straggler's one giant compute gates both modes equally
+    kw = dict(n_params=N_PARAMS, compute_s_per_batch=COMP,
+              accumulation=2, setup=ServerlessSetup(n_workers=4))
+    faults = FaultPlan(stragglers=(Straggler(worker=1, slowdown=4.0),))
+    def overhead(arch):
+        clean = run_event_epoch(arch, **kw).makespan_s
+        slow = run_event_epoch(arch, faults=faults, **kw).makespan_s
+        return slow / clean
+    assert overhead("async_spirt") < 0.7 * overhead("spirt")
+    # fast peers absorb the straggler's share from the shared pool, but
+    # total work is conserved
+    rep = run_event_epoch("async_spirt", faults=faults, **kw)
+    assert rep.work_done_batches == pytest.approx(
+        4 * round_plan("async_spirt", **kw).total_batches, rel=1e-6)
+
+
+def test_async_cold_start_spread_spawns_no_phantom_rounds():
+    """Regression: a barrier-free worker may only start a round against
+    the pool MINUS its peers' in-flight claims.  Without the
+    reservation, staggered cold starts let early finishers overdraft
+    the epoch with phantom extra rounds (~2x makespan under the
+    measured Lambda trace)."""
+    kw = dict(n_params=N_PARAMS, compute_s_per_batch=COMP,
+              setup=ServerlessSetup(n_workers=4))
+    clean = run_event_epoch("async_spirt", **kw)
+    spread = FaultPlan(cold_start_extra_s=(0.0, 40.0, 3.0, 9.0))
+    rep = run_event_epoch("async_spirt", faults=spread, **kw)
+    # exactly one self-paced round per worker: work equals the pool and
+    # the compute wall is unchanged
+    assert rep.work_done_batches == pytest.approx(
+        4 * round_plan("async_spirt", **kw).total_batches)
+    assert rep.stage_totals["compute"] == pytest.approx(
+        clean.stage_totals["compute"])
+    # the epoch ends one cold-start delta after the clean one — no
+    # phantom round stretching the tail
+    assert rep.makespan_s == pytest.approx(clean.makespan_s + 40.0)
+
+
+def test_async_crash_takeover_records_recovery():
+    rep = run_event_epoch(
+        "async_spirt", n_params=N_PARAMS, compute_s_per_batch=COMP,
+        faults=FaultPlan(crashes=(WorkerCrash(1, 5.0),)),
+        recovery="auto")
+    assert [r.mode for r in rep.recoveries] == ["takeover"]
+    assert rep.recoveries[0].rejoined_time_s is not None
+    assert rep.n_workers_end == 3
+    # survivors absorb the dead worker's share of the pool
+    assert rep.work_done_batches > 0
+
+
+def test_async_crash_restore_rejoins_at_next_commit():
+    rep = run_event_epoch(
+        "async_spirt", n_params=N_PARAMS, compute_s_per_batch=COMP,
+        faults=FaultPlan(crashes=(WorkerCrash(1, 5.0),)),
+        recovery="restore")
+    assert [r.mode for r in rep.recoveries] == ["restore"]
+    assert rep.recoveries[0].rejoined_time_s is not None
+    assert rep.n_workers_end == 4
+
+
+def test_async_byzantine_masked_only_with_feasible_trim():
+    faults = FaultPlan(byzantine=(ByzantineWorker(worker=2),))
+    kw = dict(n_params=N_PARAMS, compute_s_per_batch=COMP,
+              faults=faults)
+    masked = run_event_epoch("async_spirt", robust_trim=1, **kw)
+    assert masked.masked_updates > 0 and masked.poisoned_updates == 0
+    poisoned = run_event_epoch("async_spirt", robust_trim=0, **kw)
+    assert poisoned.poisoned_updates > 0 and poisoned.masked_updates == 0
+
+
+def test_async_autoscaler_ticks_on_fleet_equivalent_rounds():
+    from repro.serverless.autoscale import ScheduledScaler
+    rep = run_event_epoch(
+        "async_spirt", n_params=N_PARAMS, compute_s_per_batch=COMP,
+        accumulation=2,                  # 12 fleet-equivalent rounds
+        autoscaler=ScheduledScaler(schedule=((2, 1),)))
+    assert rep.scale_events and rep.scale_events[0][1] == 1
+    assert rep.n_workers_peak == 5
+
+
+@pytest.mark.parametrize("arch", NEW_ARCHS)
+def test_new_archs_flow_through_event_sweep_with_trace(arch):
+    points = [EventSweepPoint(arch=arch, n_params=N_PARAMS,
+                              compute_s_per_batch=COMP)]
+    kw = dict(rates=FaultRates(crash_rate=0.5), trace=lambda_default(),
+              n_replicates=3, seed=11, processes=1)
+    s = sweep_events(points, **kw)[0]
+    assert s.makespan_mean_s > 0 and s.cost_mean > 0
+    again = sweep_events(points, **kw)[0]
+    assert again.makespan_mean_s == s.makespan_mean_s
+    assert again.cost_mean == s.cost_mean

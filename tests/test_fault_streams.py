@@ -152,3 +152,16 @@ def test_autoscaler_none_ideal_still_uses_ema():
     assert b.observe(round_idx=2, now_s=10.0 + 50.0, active_workers=4,
                      remaining_batches=800.0, batches_per_round=1.0,
                      ideal_round_s=None) == 1
+
+
+def test_autoscaler_logs_applied_delta_near_cap():
+    """decisions must record the clamped delta actually returned, not
+    the configured step — replayed decision logs used to overstate
+    applied scale-outs near the fleet cap."""
+    a = ReactiveAutoscaler(max_workers=8, step=3)
+    _prime(a)
+    delta = a.observe(round_idx=2, now_s=20.0, active_workers=6,
+                      remaining_batches=800.0, batches_per_round=1.0,
+                      ideal_round_s=0.0)
+    assert delta == 2                 # clamped: 8 - 6 < step
+    assert a.decisions[-1][1] == delta

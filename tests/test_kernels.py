@@ -85,6 +85,26 @@ def test_significance_filter_vs_ref(n, b):
                                atol=1e-6)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_masked_filter_preserves_dtype(dtype):
+    """bf16 gradients must come back bf16 from kernel AND oracle — the
+    kernel used to pin out_shape to fp32, silently doubling the
+    filtered-sync wire bytes."""
+    from repro.kernels import block_significance as bs
+    x = jnp.asarray(RS.randn(257, 256), dtype)
+    mask = ref.block_significance(x, 1.0)
+    kept, resid = bs.masked_filter(x, mask, interpret=True)
+    k2, r2 = ref.masked_filter(x, mask)
+    assert kept.dtype == dtype and resid.dtype == dtype
+    assert k2.dtype == dtype and r2.dtype == dtype
+    # both paths filter in fp32 and round once to the input dtype, so
+    # they agree bit-for-bit even in bf16
+    np.testing.assert_array_equal(np.asarray(kept, np.float32),
+                                  np.asarray(k2, np.float32))
+    np.testing.assert_array_equal(np.asarray(resid, np.float32),
+                                  np.asarray(r2, np.float32))
+
+
 @pytest.mark.parametrize("n,b", [(64, 128), (1000, 256)])
 def test_significance_filter_conservation(n, b):
     x = jnp.asarray(RS.randn(n, b), jnp.float32)

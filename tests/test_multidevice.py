@@ -91,6 +91,60 @@ def test_strategies_agree_across_real_data_shards():
     """)
 
 
+def test_quantized_scatterreduce_tuple_axis_parity():
+    """QuantizedScatterReduce on a REAL 4-device fleet, string axis vs
+    tuple-of-axes (2x2 mesh): both must agree with the fp32 ring mean
+    to quantization tolerance, and with each other bitwise — W (the
+    scatter row count) and the collectives' device ordering come from
+    the same normalized axes, so a 2-axis data mesh cannot reassemble
+    chunks permuted."""
+    _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.compat import shard_map
+    from repro.core.compression import QuantizedScatterReduce
+
+    g = jnp.asarray(np.random.RandomState(0).randn(4, 1030),
+                    jnp.float32)
+    qsr = QuantizedScatterReduce(chunk=64)
+
+    def run(mesh, axes, spec):
+        def body(x):
+            out, resid, _ = qsr.sync([x[0]], [jnp.zeros_like(x[0])],
+                                     axes)
+            return out[0]
+        f = shard_map(body, mesh=mesh, in_specs=P(spec), out_specs=P(),
+                      check_vma=False)
+        return np.asarray(f(g))
+
+    flat = run(Mesh(np.array(jax.devices()), ("data",)), "data", "data")
+    grid = run(Mesh(np.array(jax.devices()).reshape(2, 2), ("a", "b")),
+               ("a", "b"), ("a", "b"))
+    want = np.asarray(jnp.mean(g, axis=0))
+    # fp32 ring baseline within two quantization steps
+    step = float(np.abs(np.asarray(g)).max()) / 127.0
+    np.testing.assert_allclose(flat, want, atol=2 * step)
+    np.testing.assert_allclose(grid, want, atol=2 * step)
+    # same normalized layout -> bitwise identical across mesh shapes
+    np.testing.assert_array_equal(flat, grid)
+    print("OK")
+    """, devices=4)
+
+
+def test_quantized_scatterreduce_rejects_empty_axes():
+    _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core.compression import QuantizedScatterReduce
+    try:
+        QuantizedScatterReduce().sync([jnp.ones(8)], [jnp.zeros(8)], ())
+    except ValueError as e:
+        assert "at least one mesh axis" in str(e)
+        print("OK")
+    else:
+        raise SystemExit("expected ValueError")
+    """, devices=1)
+
+
 @pytest.mark.slow
 @requires_partial_manual
 def test_dryrun_one_combo_small():
